@@ -1,0 +1,90 @@
+"""Shared benchmark setup: bench/features/predictors with disk caching."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.feature_store import compute_features  # noqa: E402
+from repro.core.predictors import Predictor, PredictorConfig  # noqa: E402
+from repro.data.taskgen import splits  # noqa: E402
+from repro.sim.miobench import SERVER_CLASSES, generate  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+BUDGETS = {
+    # (n_tasks, encoder_profile, predictor_epochs, qlmio_episodes, trials)
+    "smoke": dict(n_tasks=400, profile="tiny", epochs=6, episodes=60,
+                  trials=5),
+    "fast": dict(n_tasks=3377, profile="fast", epochs=30, episodes=300,
+                 trials=30),
+    "paper": dict(n_tasks=3377, profile="paper", epochs=50, episodes=12000,
+                  trials=100),
+}
+
+
+def budget() -> dict:
+    return BUDGETS[os.environ.get("BENCH_BUDGET", "smoke")]
+
+
+def world(seed: int = 0):
+    """(bench, (f_img, f_text), (tr, va, te)) under the active budget."""
+    b = budget()
+    bench = generate(seed=seed, n_tasks=b["n_tasks"])
+    f_img, f_text = compute_features(bench.tasks, profile=b["profile"],
+                                     cache_dir=os.path.join(RESULTS, "cache"))
+    return bench, (f_img, f_text), splits(bench.tasks.n, seed)
+
+
+def flat_records(bench, f_text, f_img, ids):
+    C = len(SERVER_CLASSES)
+    t = np.repeat(ids, C)
+    c = np.tile(np.arange(C), len(ids))
+    return {"f_text": f_text[t], "f_img": f_img[t],
+            "model_id": bench.model_id[c], "device_id": bench.device_id[c],
+            "label": (bench.score[t, c] == 1).astype(np.int64),
+            "latency_s": bench.latency_s[t, c].astype(np.float32)}
+
+
+def trained_predictors(bench, feats, split_ids, *, epochs=None, seed=0):
+    """Train (or load cached) MGQP + MILP; return predictions [N, C]."""
+    b = budget()
+    epochs = epochs or b["epochs"]
+    f_img, f_text = feats
+    tr, va, _ = split_ids
+    tag = f"preds_{b['profile']}_{bench.tasks.n}_{epochs}_{seed}.npz"
+    path = os.path.join(RESULTS, "cache", tag)
+    if os.path.exists(path):
+        z = np.load(path, allow_pickle=True)
+        return (z["milp"], z["mgqp"], json.loads(str(z["hist_milp"])),
+                json.loads(str(z["hist_mgqp"])))
+    cfgp = PredictorConfig(epochs=epochs, batch=256, seed=seed)
+    milp = Predictor("latency", 8, 8, cfgp, feat_dim=f_text.shape[1])
+    hist_milp = milp.fit(flat_records(bench, f_text, f_img, tr),
+                         flat_records(bench, f_text, f_img, va))
+    mgqp = Predictor("quality", 8, 8, cfgp, feat_dim=f_text.shape[1])
+    hist_mgqp = mgqp.fit(flat_records(bench, f_text, f_img, tr),
+                         flat_records(bench, f_text, f_img, va))
+    C = len(SERVER_CLASSES)
+    allb = {"f_text": np.repeat(f_text, C, 0),
+            "f_img": np.repeat(f_img, C, 0),
+            "model_id": np.tile(bench.model_id, bench.tasks.n),
+            "device_id": np.tile(bench.device_id, bench.tasks.n)}
+    milp_preds = milp.predict(allb).reshape(-1, C).astype(np.float32)
+    mgqp_preds = mgqp.predict(allb).reshape(-1, C).astype(np.float32)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez_compressed(path, milp=milp_preds, mgqp=mgqp_preds,
+                        hist_milp=json.dumps(hist_milp),
+                        hist_mgqp=json.dumps(hist_mgqp))
+    return milp_preds, mgqp_preds, hist_milp, hist_mgqp
+
+
+def emit(name: str, payload: dict):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload

@@ -1,0 +1,24 @@
+"""Fig. 1: generation quality / response latency disparity across devices."""
+from benchmarks.common import emit, world
+
+from repro.sim.miobench import SERVER_CLASSES, summary
+
+
+def run():
+    bench, _, _ = world()
+    s = summary(bench)
+    rows = []
+    for dev, _mdl in SERVER_CLASSES:
+        r = s[dev]
+        rows.append((dev, r["model"], r["accuracy"], r["timeout_rate"],
+                     r["latency_p50_s"], r["latency_p95_s"]))
+    print("fig1,device,model,accuracy,timeout_rate,lat_p50_s,lat_p95_s")
+    for row in rows:
+        print("fig1," + ",".join(f"{x:.4f}" if isinstance(x, float) else str(x)
+                                 for x in row))
+    emit("fig1_device_disparity", s)
+    return s
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Fig. 7: QLMIO training convergence (reward, loss, latency, completion)
+in the 15-server / 30-user configuration."""
+import numpy as np
+
+import json
+import os
+
+from benchmarks.common import budget, emit, trained_predictors, world
+
+from repro.core.d3qn import D3QNConfig
+from repro.core.qlmio import QLMIO, QLMIOConfig
+from repro.sim.cemllm import make_servers
+
+
+def _cached(tag):
+    from benchmarks.common import RESULTS
+    import os as _os
+    p = _os.path.join(RESULTS, tag + '.json')
+    if _os.environ.get('BENCH_REUSE', '1') != '0' and _os.path.exists(p):
+        return json.load(open(p))
+    return None
+
+
+def run(n_servers: int = 15, users: int = 30):
+    q = None
+    cached = _cached("fig7_qlmio_convergence")
+    if cached is not None:
+        hist = cached["history"]
+    else:
+        b = budget()
+        bench, feats, split_ids = world()
+        tr, va, te = split_ids
+        milp_preds, mgqp_preds, _, _ = trained_predictors(bench, feats,
+                                                          split_ids)
+        servers = make_servers(n_servers, bench)
+        episodes = b["episodes"]
+        cfg = QLMIOConfig(episodes=episodes, users=users, seed=0,
+                          agent=D3QNConfig(
+                              eps_decay_steps=max(episodes * users // 2,
+                                                  500)))
+        q = QLMIO(bench, servers, feats, milp_preds, mgqp_preds, cfg)
+        hist = q.train(tr)
+    print("fig7,episode,avg_reward,avg_latency_s,completion_rate,loss")
+    stride = max(1, len(hist) // 40)
+    for h in hist[::stride]:
+        print(f"fig7,{h['episode']},{h['avg_reward']:.3f},"
+              f"{h['avg_latency_s']:.2f},{h['completion_rate']:.3f},"
+              f"{h['loss']:.4f}")
+    tail = hist[-max(1, len(hist) // 10):]
+    print(f"fig7,converged_reward,{np.mean([h['avg_reward'] for h in tail]):.3f}")
+    print(f"fig7,converged_completion,"
+          f"{np.mean([h['completion_rate'] for h in tail]):.3f} "
+          f"(paper: ~0.90)")
+    emit("fig7_qlmio_convergence", {"history": hist})
+    return q, hist
+
+
+if __name__ == "__main__":
+    run()

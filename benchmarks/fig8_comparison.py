@@ -1,0 +1,96 @@
+"""Fig. 8: QLMIO vs. All-Cloud / Greedy / D3QN / SAC / QoS-Aware RL across
+server counts (5/10/15 @ 30 users) and user counts (10/20/30 @ 15 servers)."""
+import dataclasses
+
+import numpy as np
+
+import json
+import os
+
+from benchmarks.common import budget, emit, trained_predictors, world
+
+from repro.core import baselines as B
+from repro.core.d3qn import D3QNConfig
+from repro.core.qlmio import QLMIO, QLMIOConfig
+from repro.sim.cemllm import make_servers
+from repro.sim.miobench import SERVER_CLASSES
+
+
+def _train_eval(make, bench, servers, feats, tr, te, users, episodes,
+                trials, seed=0):
+    cfg = QLMIOConfig(episodes=episodes, users=users, seed=seed,
+                      agent=D3QNConfig(
+                          eps_decay_steps=max(episodes * users // 2, 500),
+                          seed=seed))
+    q = make(cfg)
+    q.train(tr)
+    return q.evaluate(te, users=users, trials=trials)
+
+
+def _cached(tag):
+    from benchmarks.common import RESULTS
+    import os as _os
+    p = _os.path.join(RESULTS, tag + '.json')
+    if _os.environ.get('BENCH_REUSE', '1') != '0' and _os.path.exists(p):
+        return json.load(open(p))
+    return None
+
+
+def run():
+    results = _cached("fig8_comparison")
+    print("fig8,servers,users,method,avg_reward,avg_latency_s,completion_rate")
+    if results is None:
+        b = budget()
+        bench, feats, split_ids = world()
+        tr, va, te = split_ids
+        milp_preds, mgqp_preds, _, _ = trained_predictors(bench, feats,
+                                                          split_ids)
+        episodes, trials = b["episodes"], b["trials"]
+        zeros = np.zeros((bench.tasks.n, len(SERVER_CLASSES)), np.float32)
+        grid = ([(n, 30) for n in (5, 10, 15)] +
+                [(15, u) for u in (10, 20)])  # (15,30) in the first block
+        results = {}
+        for n_servers, users in grid:
+            servers = make_servers(n_servers, bench)
+            methods = {
+                "qlmio": lambda cfg: QLMIO(bench, servers, feats, milp_preds,
+                                           mgqp_preds, cfg),
+                "d3qn": lambda cfg: QLMIO(
+                    bench, servers, feats, zeros, zeros,
+                    dataclasses.replace(cfg, use_milp=False, use_mgqp=False,
+                                        use_task_features=False)),
+                "sac": lambda cfg: B.make_sac(bench, servers, feats, cfg),
+                "qos_rl": lambda cfg: B.make_qos_rl(bench, servers, feats,
+                                                    tr, cfg),
+            }
+            row = {}
+            for name, make in methods.items():
+                row[name] = _train_eval(make, bench, servers, feats, tr, te,
+                                        users, episodes, trials)
+            row.update(B.evaluate_heuristics(bench, servers, te, users,
+                                             trials))
+            results[f"{n_servers}s_{users}u"] = row
+    for key, row in results.items():
+        n_servers, users = key.replace("u", "").split("s_")
+        for name, r in row.items():
+            if name == "random":
+                continue
+            print(f"fig8,{n_servers},{users},{name},"
+                  f"{r['avg_reward']:.3f},{r['avg_latency_s']:.2f},"
+                  f"{r['completion_rate']:.3f}")
+
+    # headline claims (paper Sec. V-F)
+    for key, row in results.items():
+        q = row["qlmio"]
+        red_cloud = 1 - q["avg_latency_s"] / row["all_cloud"]["avg_latency_s"]
+        red_greedy = 1 - q["avg_latency_s"] / row["greedy"]["avg_latency_s"]
+        print(f"fig8,headline,{key},latency_reduction_vs_all_cloud,"
+              f"{red_cloud:.3f},vs_greedy,{red_greedy:.3f},"
+              f"completion_vs_cloud,"
+              f"{q['completion_rate'] / max(row['all_cloud']['completion_rate'], 1e-9):.3f}")
+    emit("fig8_comparison", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

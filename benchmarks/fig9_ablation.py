@@ -1,0 +1,65 @@
+"""Fig. 9: ablation — QLMIO without MILP / without MGQP / without both."""
+import dataclasses
+
+import numpy as np
+
+import json
+import os
+
+from benchmarks.common import budget, emit, trained_predictors, world
+
+from repro.core.d3qn import D3QNConfig
+from repro.core.qlmio import QLMIO, QLMIOConfig
+from repro.sim.cemllm import make_servers
+
+
+def _cached(tag):
+    from benchmarks.common import RESULTS
+    import os as _os
+    p = _os.path.join(RESULTS, tag + '.json')
+    if _os.environ.get('BENCH_REUSE', '1') != '0' and _os.path.exists(p):
+        return json.load(open(p))
+    return None
+
+
+def run(n_servers: int = 15, users: int = 30):
+    b = budget()
+    bench, feats, split_ids = world()
+    tr, va, te = split_ids
+    milp_preds, mgqp_preds, _, _ = trained_predictors(bench, feats, split_ids)
+    servers = make_servers(n_servers, bench)
+    episodes, trials = b["episodes"], b["trials"]
+
+    variants = {
+        "qlmio": {},
+        "no_milp": dict(use_milp=False),
+        "no_mgqp": dict(use_mgqp=False),
+        "no_both": dict(use_milp=False, use_mgqp=False),
+    }
+    results = _cached("fig9_ablation") or {}
+    print("fig9,variant,avg_reward,avg_latency_s,completion_rate")
+    for name, kw in variants.items():
+        if name not in results:
+            cfg = QLMIOConfig(episodes=episodes, users=users, seed=0,
+                              agent=D3QNConfig(
+                                  eps_decay_steps=max(episodes * users // 2,
+                                                      500)),
+                              **kw)
+            q = QLMIO(bench, servers, feats, milp_preds, mgqp_preds, cfg)
+            q.train(tr)
+            results[name] = q.evaluate(te, users=users, trials=trials)
+        r = results[name]
+        print(f"fig9,{name},{r['avg_reward']:.3f},"
+              f"{r['avg_latency_s']:.2f},{r['completion_rate']:.3f}")
+    full = results["qlmio"]
+    for name in ("no_milp", "no_mgqp", "no_both"):
+        red = 1 - full["avg_latency_s"] / results[name]["avg_latency_s"]
+        dcomp = full["completion_rate"] - results[name]["completion_rate"]
+        print(f"fig9,delta_vs_{name},latency_reduction,{red:.3f},"
+              f"completion_gain,{dcomp:.3f}")
+    emit("fig9_ablation", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""Kernel microbenchmarks.
+
+On CPU, wall-clock measures the interpret path (not TPU performance), so we
+report (a) correctness error vs. oracle and (b) the analytic TPU roofline
+time for each kernel's workload: FLOPs / 197 TF and bytes / 819 GB/s, the
+numbers the §Perf iterations use.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+from repro.kernels import ops, ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _roof(flops, bytes_):
+    return max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention, one v5e-chip-sized tile of work
+    B, S, H, Hkv, D = 1, 2048, 8, 2, 128
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+    t0 = time.time()
+    o = ops.flash_attention(q, k, v, block_q=256, block_k=256)
+    err = float(jnp.max(jnp.abs(
+        o.astype(jnp.float32)
+        - ref.flash_attention_ref(q, k, v).astype(jnp.float32))))
+    flops = 2 * 2 * B * H * S * S / 2 * D
+    byts = (q.size + 2 * k.size + o.size) * 2
+    rows.append(("flash_attention", f"B{B}xS{S}xH{H}xD{D}", err,
+                 _roof(flops, byts), time.time() - t0))
+
+    # flash decode
+    S2 = 8192
+    q1 = jnp.asarray(rng.normal(size=(B, H, D)), jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(B, S2, Hkv, D)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(B, S2, Hkv, D)), jnp.bfloat16)
+    cpos = jnp.broadcast_to(jnp.arange(S2), (B, S2)).astype(jnp.int32)
+    pos = jnp.full((B,), S2 - 1, jnp.int32)
+    t0 = time.time()
+    o = ops.flash_decode(q1, kc, vc, cpos, pos, block_k=512)
+    err = float(jnp.max(jnp.abs(
+        o.astype(jnp.float32)
+        - ref.flash_decode_ref(q1, kc, vc, cpos, pos).astype(jnp.float32))))
+    flops = 2 * 2 * B * H * S2 * D
+    byts = 2 * kc.size * 2
+    rows.append(("flash_decode", f"B{B}xS{S2}xH{H}", err, _roof(flops, byts),
+                 time.time() - t0))
+
+    # SSD scan
+    b2, S3, h2, p2, n2 = 1, 1024, 8, 64, 64
+    x = jnp.asarray(rng.normal(size=(b2, S3, h2, p2)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, (b2, S3, h2)), jnp.float32)
+    a_neg = -jnp.asarray(rng.uniform(0.1, 1.0, (h2,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b2, S3, n2)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b2, S3, n2)), jnp.float32)
+    t0 = time.time()
+    y = ops.ssd_scan(x, dt, a_neg, Bm, Cm, chunk=256)
+    err = float(jnp.max(jnp.abs(y - ref.ssd_scan_ref(x, dt, a_neg, Bm, Cm))))
+    Q = 256
+    flops = b2 * h2 * (S3 / Q) * (2 * Q * Q * n2 + 2 * Q * Q * p2
+                                  + 4 * Q * p2 * n2)
+    byts = 4 * (x.size + Bm.size + Cm.size + y.size)
+    rows.append(("mamba2_ssd", f"S{S3}xh{h2}xp{p2}xn{n2}", err,
+                 _roof(flops, byts), time.time() - t0))
+
+    # grouped matmul
+    E, C, K, N = 16, 256, 1024, 1024
+    xg = jnp.asarray(rng.normal(size=(E, C, K)), jnp.bfloat16)
+    wg = jnp.asarray(rng.normal(size=(E, K, N)), jnp.bfloat16)
+    t0 = time.time()
+    g = ops.grouped_matmul(xg, wg)
+    err = float(jnp.max(jnp.abs(
+        g.astype(jnp.float32)
+        - ref.grouped_matmul_ref(xg, wg).astype(jnp.float32))))
+    rows.append(("moe_gmm", f"E{E}x{C}x{K}x{N}", err,
+                 _roof(2 * E * C * K * N, 2 * (xg.size + wg.size + g.size)),
+                 time.time() - t0))
+
+    # rmsnorm
+    xr = jnp.asarray(rng.normal(size=(4096, 2048)), jnp.bfloat16)
+    sc = jnp.asarray(rng.normal(size=(2048,)), jnp.float32)
+    t0 = time.time()
+    r = ops.rmsnorm(xr, sc)
+    err = float(jnp.max(jnp.abs(
+        r.astype(jnp.float32)
+        - ref.rmsnorm_ref(xr, sc).astype(jnp.float32))))
+    rows.append(("rmsnorm", "4096x2048", err,
+                 _roof(4 * xr.size, 2 * 2 * xr.size), time.time() - t0))
+
+    print("kernel,name,workload,max_err_vs_oracle,tpu_roofline_us,"
+          "cpu_interpret_s")
+    for name, wl, err, roof_s, wall in rows:
+        print(f"kernel,{name},{wl},{err:.2e},{roof_s*1e6:.1f},{wall:.1f}")
+    emit("kernel_bench", {"rows": [
+        {"name": n, "workload": w, "err": e, "tpu_roofline_us": r_ * 1e6,
+         "cpu_wall_s": wl} for n, w, e, r_, wl in rows]})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

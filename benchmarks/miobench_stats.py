@@ -1,0 +1,36 @@
+"""Table II / Sec. V-A: MIOBench dataset statistics."""
+import numpy as np
+
+from benchmarks.common import emit, world
+
+from repro.data.taskgen import CATEGORIES
+from repro.sim.miobench import SERVER_CLASSES
+
+
+def run():
+    bench, _, _ = world()
+    n_cat = len(np.unique(bench.tasks.category))
+    stats = {
+        "n_tasks": int(bench.tasks.n),
+        "n_server_classes": len(SERVER_CLASSES),
+        "n_records": int(bench.n_records),
+        "n_categories": int(n_cat),
+        "score_values": sorted(int(v) for v in np.unique(bench.score)),
+        "latency_ms_min": float(bench.latency_s.min() * 1e3),
+        "latency_ms_max": float(bench.latency_s.max() * 1e3),
+        "fields": ["dataset", "prompt", "device_type", "model_name", "score",
+                   "latency_ms", "sample_id", "index", "source"],
+    }
+    rec = next(iter(bench.records()))
+    assert set(rec) == set(stats["fields"])
+    print("miobench,n_tasks,n_records,n_categories,score_values")
+    print(f"miobench,{stats['n_tasks']},{stats['n_records']},"
+          f"{stats['n_categories']},{stats['score_values']}")
+    if bench.tasks.n == 3377:
+        assert stats["n_records"] == 10131, "paper: 10,131 records"
+    emit("miobench_stats", stats)
+    return stats
+
+
+if __name__ == "__main__":
+    run()

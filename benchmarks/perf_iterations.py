@@ -1,0 +1,146 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> measure.
+
+Runs the three chosen cells (worst roofline fraction / most collective-bound
+/ most representative of the paper's serving technique) through explicit
+before/after variants and appends every iteration to results/perf_log.json.
+
+Must run as its own process (512 placeholder devices):
+  PYTHONPATH=src:. python -m benchmarks.perf_iterations [--only A]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# (cell_id, arch, shape, variant_name, hypothesis, run_cell kwargs)
+ITERATIONS = [
+    ("A", "qwen2-0.5b", "train_4k", "baseline",
+     "14 heads don't divide the 16-wide model axis, so ALL attention "
+     "compute (QKV/O projections + score matmuls) replicates 16x across "
+     "the model axis; expect flops/dev ~4x above the perfectly sharded "
+     "value.", {}),
+    ("A", "qwen2-0.5b", "train_4k", "context_parallel",
+     "Shard the sequence dim of tokens/labels over `model` (context "
+     "parallelism): attention becomes seq-local per shard, dividing the "
+     "replicated attention flops by up to 16; predicted flops/dev "
+     "9.5e13 -> ~2.5e13 (mlp/vocab terms unchanged).",
+     {"seq_shard": True}),
+    ("B", "chameleon-34b", "decode_32k", "baseline_repeat_kv",
+     "GQA decode with jnp.repeat materializes the 8x-inflated KV cache "
+     "(64 q-heads / 8 kv-heads): each layer round-trips 8x cache bytes "
+     "and the repeated tensor is resharded across the model axis -> "
+     "collective-bound decode.", {"cfg_overrides": {"decode_repeat_kv": True}}),
+    ("B", "chameleon-34b", "decode_32k", "grouped_gqa_einsum",
+     "Group q as [B, Hkv, G, D] and contract against the un-repeated "
+     "cache: cache bytes/step drop 8x and the all-gather of the repeated "
+     "KV disappears; predicted t_memory ~8x down, collective term "
+     "dominated only by logits/activation psums.", {}),
+    ("C", "xlstm-1.3b", "prefill_32k", "baseline_chunk256",
+     "mLSTM chunkwise materializes [b,h,Q,Q] fp32 decay/score blocks in "
+     "HBM per chunk; total QQ bytes scale as S*Q, so Q=256 dominates the "
+     "memory term.", {}),
+    ("C", "xlstm-1.3b", "prefill_32k", "chunk128",
+     "Halve the chunk to Q=128 (still MXU-aligned): QQ-block bytes "
+     "halve; predict t_memory ~415s -> ~210s with unchanged useful "
+     "FLOPs.", {"cfg_overrides": {"scan_chunk": 128}}),
+    ("C", "xlstm-1.3b", "prefill_32k", "chunk64",
+     "Q=64: another 2x fewer QQ bytes, but sub-MXU tiles (64<128) start "
+     "wasting systolic occupancy on real TPU; measure the memory-term "
+     "win to weigh against it.", {"cfg_overrides": {"scan_chunk": 64}}),
+    # --- round 2 (hypotheses updated from round-1 measurements) ---
+    ("A", "qwen2-0.5b", "train_4k", "full_dp",
+     "Round-1 CP was REFUTED: GSPMD inserted 8x more collective traffic "
+     "than it saved in compute.  New hypothesis: a 0.5B model doesn't "
+     "need TP at all — map batch over BOTH mesh axes (pure DP-256, "
+     "params+attention replicated, ZeRO-1 over all 256 chips).  "
+     "Attention compute divides by 256 instead of 16; grads all-reduce "
+     "1GB bf16 -> ~0.08s collective.",
+     {"rules_override": {"batch": ("data", "model"), "mlp": None,
+                         "vocab": None, "heads": None, "kv_heads": None}}),
+    ("C", "xlstm-1.3b", "prefill_32k", "chunk512",
+     "Round-1 chunk-shrink was REFUTED: memory term GREW (415->448s as "
+     "Q fell), so the dominant traffic is the per-chunk [b,h,dk,dv] "
+     "fp32 state round-trip (nc proportional), not the QQ blocks.  New "
+     "hypothesis: DOUBLE the chunk to 512 -> half the state round-trips; "
+     "predict t_memory ~415 -> ~230s.",
+     {"cfg_overrides": {"scan_chunk": 512}}),
+    ("C", "xlstm-1.3b", "prefill_32k", "chunk1024",
+     "Q=1024: quarter the state round-trips; QQ-block traffic (~S*Q) "
+     "starts to bite back; measure the crossover.",
+     {"cfg_overrides": {"scan_chunk": 1024}}),
+    ("D", "qwen2-moe-a2.7b", "train_4k", "baseline",
+     "The [E,C,d] MoE dispatch/combine tensors are all-reduced whole "
+     "(2TB+/layer-set per device): GSPMD picks a replicated layout for "
+     "the gather-built dispatch buffer.", {}),
+    ("D", "qwen2-moe-a2.7b", "train_4k", "dispatch_sharding",
+     "Pin the capacity dim of the dispatch/combine tensors to `data` "
+     "with with_sharding_constraint (C aligned to 128): cross-shard "
+     "token movement becomes all-to-all/all-gather of token rows; "
+     "predict collective bytes down >10x.",
+     {"cfg_overrides": {"moe_dispatch_axes": ("data",)}}),
+    # --- round 3 ---
+    ("B", "chameleon-34b", "decode_32k", "no_f32_cache_cast",
+     "Round-2 left decode memory-bound at 0.55s/token — far above the "
+     "~4ms cache read.  The explicit v_cache.astype(f32) in the combine "
+     "einsum materializes an fp32 copy of the cache per layer; use "
+     "preferred_element_type instead.  Predict t_memory down ~2x.", {}),
+    ("C", "xlstm-1.3b", "prefill_32k", "gather_qkv",
+     "Round-2 (refined analyzer) shows cell C is COLLECTIVE-bound "
+     "(8.3s): each mLSTM block psums q/k/v projections that contract "
+     "the model-sharded d_in.  Replicate the conv output once (one "
+     "all-gather) and make wq/wk/wv column-parallel: 3 psums -> 1 "
+     "gather per block; predict t_collective ~8.3 -> ~4s.",
+     {"cfg_overrides": {"xlstm_gather_qkv": True}}),
+    ("D", "qwen2-moe-a2.7b", "train_4k", "dispatch_shard_chunked",
+     "Round-2 still 109GB/dev temps: the global [E, C, d] buffers are "
+     "materialized at full capacity.  Scan tokens through the MoE in 8 "
+     "chunks (C divides by 8): dispatch buffers shrink 8x; collective "
+     "and temp memory should follow.",
+     {"cfg_overrides": {"moe_dispatch_axes": ("data",),
+                        "moe_scan_chunks": 8}}),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="cell id A/B/C")
+    ap.add_argument("--name", default=None, help="single variant name")
+    args = ap.parse_args()
+    path = os.path.join(RESULTS, "perf_log.json")
+    log = json.load(open(path)) if os.path.exists(path) else []
+    done = {(r["cell"], r["variant"]) for r in log}
+    for cell, arch, shape, name, hypothesis, kw in ITERATIONS:
+        if args.only and cell != args.only:
+            continue
+        if args.name and name != args.name:
+            continue
+        if (cell, name) in done:
+            print(f"[perf] {cell}/{name} cached", flush=True)
+            continue
+        print(f"[perf] {cell} {arch} x {shape} :: {name}", flush=True)
+        rec = dryrun.run_cell(arch, shape, multi_pod=False, verbose=True,
+                              tag=name, **kw)
+        rec.update({"cell": cell, "variant": name, "hypothesis": hypothesis})
+        log.append(rec)
+        json.dump(log, open(path, "w"), indent=1)
+    # summary
+    print("perf,cell,variant,t_compute_s,t_memory_s,t_collective_s,bottleneck")
+    for r in log:
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        print(f"perf,{r['cell']},{r['variant']},{ro['t_compute_s']:.3e},"
+              f"{ro['t_memory_s']:.3e},{ro['t_collective_s']:.3e},"
+              f"{ro['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

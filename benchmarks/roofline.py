@@ -1,0 +1,88 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line lever on the dominant term.
+Also nominates the three hillclimb cells (worst roofline fraction, most
+collective-bound, most representative of the paper's serving technique).
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import RESULTS, emit  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.models.counting import model_flops  # noqa: E402
+
+LEVERS = {
+    "compute": "shard the replicated attention compute (context/sequence "
+               "parallelism over `model`) or cut remat recompute",
+    "memory": "move streaming-softmax/SSD inner loops into the Pallas "
+              "kernels (VMEM-resident accumulators) to kill score-block "
+              "HBM round-trips",
+    "collective": "reorder TP activation psums (reduce-scatter + local "
+                  "compute), overlap grad all-reduce with backward, or "
+                  "drop TP width for this shape",
+}
+
+
+def load(path=None):
+    path = path or os.path.join(RESULTS, "dryrun.json")
+    return json.load(open(path))
+
+
+def rows(records):
+    out = []
+    for r in records:
+        if r.get("status") != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        roof = r["roofline"]
+        mf = model_flops(cfg, shape)
+        hlo_global = roof["flops_per_device"] * r["n_chips"]
+        terms = {"compute": roof["t_compute_s"], "memory": roof["t_memory_s"],
+                 "collective": roof["t_collective_s"]}
+        t_max = max(terms.values())
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": roof["t_compute_s"],
+            "t_memory_s": roof["t_memory_s"],
+            "t_collective_s": roof["t_collective_s"],
+            "bottleneck": roof["bottleneck"],
+            "model_flops": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / max(hlo_global, 1.0),
+            "roofline_fraction": terms["compute"] / max(t_max, 1e-12),
+            "lever": LEVERS[roof["bottleneck"]],
+        })
+    return out
+
+
+def run(path=None):
+    table = rows(load(path))
+    print("roofline,arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,useful_ratio,roofline_fraction")
+    for r in table:
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['bottleneck']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+    single = [r for r in table if r["mesh"] == "16x16"]
+    if single:
+        worst = min(single, key=lambda r: r["roofline_fraction"])
+        coll = max(single, key=lambda r: r["t_collective_s"]
+                   / max(r["t_compute_s"], 1e-12))
+        print(f"roofline,hillclimb_worst_fraction,{worst['arch']},"
+              f"{worst['shape']},{worst['roofline_fraction']:.3f}")
+        print(f"roofline,hillclimb_most_collective,{coll['arch']},"
+              f"{coll['shape']},"
+              f"{coll['t_collective_s'] / max(coll['t_compute_s'], 1e-12):.2f}x")
+    emit("roofline_table", {"rows": table})
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run              # smoke budget
+  BENCH_BUDGET=fast  python -m benchmarks.run          # paper-shaped run
+  BENCH_BUDGET=paper python -m benchmarks.run          # full-fidelity
+
+Each section prints CSV lines (also written to results/*.json).
+"""
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (fig1_device_disparity, fig5_milp, fig6_mgqp,
+                            fig7_qlmio_convergence, fig8_comparison,
+                            fig9_ablation, kernel_bench, miobench_stats,
+                            roofline)
+    budget = os.environ.get("BENCH_BUDGET", "smoke")
+    print(f"# benchmarks (budget={budget}) — sections: miobench, fig1, "
+          f"fig5, fig6, fig7, fig8, fig9, kernels, roofline", flush=True)
+    sections = [
+        ("miobench_stats", miobench_stats.run),
+        ("fig1", fig1_device_disparity.run),
+        ("fig5", fig5_milp.run),
+        ("fig6", fig6_mgqp.run),
+        ("fig7", fig7_qlmio_convergence.run),
+        ("fig8", fig8_comparison.run),
+        ("fig9", fig9_ablation.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    failures = []
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"## section {name}", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"## section {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

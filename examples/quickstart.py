@@ -1,0 +1,74 @@
+"""Quickstart: the full QLMIO pipeline in ~2 minutes on CPU.
+
+1. Synthesize MIOBench (3,377 tasks x 3 server classes).
+2. Compute frozen encoder features, train MGQP + MILP predictor heads.
+3. Train the QLMIO D3QN offloading agent on CEMLLM-Sim.
+4. Compare against All-Cloud / Greedy baselines on the test split.
+
+Scale knobs at the top; the paper-scale run lives in benchmarks/.
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import baselines as B  # noqa: E402
+from repro.core.d3qn import D3QNConfig  # noqa: E402
+from repro.core.feature_store import compute_features  # noqa: E402
+from repro.core.predictors import Predictor, PredictorConfig  # noqa: E402
+from repro.core.qlmio import QLMIO, QLMIOConfig  # noqa: E402
+from repro.data.taskgen import splits  # noqa: E402
+from repro.sim.cemllm import make_servers  # noqa: E402
+from repro.sim.miobench import SERVER_CLASSES, generate, summary  # noqa: E402
+
+N_TASKS = 600          # full bench: 3377
+ENCODER_PROFILE = "tiny"  # paper fidelity: "fast" or "paper"
+EPISODES = 120         # paper: 12000
+USERS = 15
+SERVERS = 5
+
+t0 = time.time()
+bench = generate(seed=0, n_tasks=N_TASKS)
+print("MIOBench:", {k: v for k, v in summary(bench).items()
+                    if k in ("n_tasks", "n_records")})
+tr, va, te = splits(bench.tasks.n)
+f_img, f_text = compute_features(bench.tasks, profile=ENCODER_PROFILE,
+                                 cache_dir=None)
+
+
+def flat(ids):
+    C = len(SERVER_CLASSES)
+    t = np.repeat(ids, C)
+    c = np.tile(np.arange(C), len(ids))
+    return {"f_text": f_text[t], "f_img": f_img[t],
+            "model_id": bench.model_id[c], "device_id": bench.device_id[c],
+            "label": (bench.score[t, c] == 1).astype(np.int64),
+            "latency_s": bench.latency_s[t, c].astype(np.float32)}
+
+
+pc = PredictorConfig(epochs=10, batch=256)
+milp = Predictor("latency", 8, 8, pc, feat_dim=f_text.shape[1])
+h = milp.fit(flat(tr), flat(va))
+print(f"[{time.time()-t0:.0f}s] MILP  val MAE  {h[-1]['val_mae_s']:.2f}s")
+mgqp = Predictor("quality", 8, 8, pc, feat_dim=f_text.shape[1])
+h = mgqp.fit(flat(tr), flat(va))
+print(f"[{time.time()-t0:.0f}s] MGQP  val acc  {h[-1]['val_acc']:.3f}")
+
+C = len(SERVER_CLASSES)
+allb = {"f_text": np.repeat(f_text, C, 0), "f_img": np.repeat(f_img, C, 0),
+        "model_id": np.tile(bench.model_id, bench.tasks.n),
+        "device_id": np.tile(bench.device_id, bench.tasks.n)}
+milp_preds = milp.predict(allb).reshape(-1, C)
+mgqp_preds = mgqp.predict(allb).reshape(-1, C)
+
+servers = make_servers(SERVERS, bench)
+q = QLMIO(bench, servers, (f_img, f_text), milp_preds, mgqp_preds,
+          QLMIOConfig(episodes=EPISODES, users=USERS, seed=0,
+                      agent=D3QNConfig(eps_decay_steps=EPISODES * USERS // 2)))
+q.train(tr, verbose=True, log_every=40)
+res = q.evaluate(te, trials=10)
+print(f"[{time.time()-t0:.0f}s] QLMIO  : {res}")
+for name, r in B.evaluate_heuristics(bench, servers, te, USERS, 10).items():
+    print(f"         {name:10s}: {r}")

@@ -1,0 +1,56 @@
+"""Dev loop: end-to-end paper pipeline on a tiny budget."""
+import time
+
+import numpy as np
+
+from repro.core.feature_store import compute_features
+from repro.core.predictors import Predictor, PredictorConfig
+from repro.core.qlmio import QLMIO, QLMIOConfig
+from repro.core import baselines as B
+from repro.core.d3qn import D3QNConfig
+from repro.data.taskgen import splits
+from repro.sim.cemllm import make_servers
+from repro.sim.miobench import SERVER_CLASSES, generate
+
+t0 = time.time()
+bench = generate(seed=0, n_tasks=400)
+tr, va, te = splits(bench.tasks.n)
+f_img, f_text = compute_features(bench.tasks, profile="tiny", cache_dir=None)
+print(f"[{time.time()-t0:.0f}s] features {f_img.shape}")
+
+# ---- predictor training data: task x server-class pairs
+def flat(ids):
+    C = len(SERVER_CLASSES)
+    t = np.repeat(ids, C)
+    c = np.tile(np.arange(C), len(ids))
+    return {"f_text": f_text[t], "f_img": f_img[t],
+            "model_id": bench.model_id[c], "device_id": bench.device_id[c],
+            "label": (bench.score[t, c] == 1).astype(np.int64),
+            "latency_s": bench.latency_s[t, c].astype(np.float32)}
+
+cfgp = PredictorConfig(epochs=8, batch=128)
+milp = Predictor("latency", 8, 8, cfgp, feat_dim=f_text.shape[1])
+h = milp.fit(flat(tr), flat(va))
+print(f"[{time.time()-t0:.0f}s] MILP val MAE {h[-1]['val_mae_s']:.2f}s")
+mgqp = Predictor("quality", 8, 8, cfgp, feat_dim=f_text.shape[1])
+h = mgqp.fit(flat(tr), flat(va))
+print(f"[{time.time()-t0:.0f}s] MGQP val acc {h[-1]['val_acc']:.3f}")
+
+# ---- predictions for all tasks x classes
+C = len(SERVER_CLASSES)
+allb = {"f_text": np.repeat(f_text, C, 0), "f_img": np.repeat(f_img, C, 0),
+        "model_id": np.tile(bench.model_id, bench.tasks.n),
+        "device_id": np.tile(bench.device_id, bench.tasks.n)}
+milp_preds = milp.predict(allb).reshape(-1, C)
+mgqp_preds = mgqp.predict(allb).reshape(-1, C)
+
+servers = make_servers(5, bench)
+cfg = QLMIOConfig(episodes=60, users=10, seed=0,
+                  agent=D3QNConfig(eps_decay_steps=400))
+q = QLMIO(bench, servers, (f_img, f_text), milp_preds, mgqp_preds, cfg)
+hist = q.train(tr, verbose=True, log_every=20)
+res = q.evaluate(te, trials=5)
+print(f"[{time.time()-t0:.0f}s] QLMIO test:", res)
+heur = B.evaluate_heuristics(bench, servers, te, 10, 5)
+for k, v in heur.items():
+    print(k, v)

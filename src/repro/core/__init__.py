@@ -1,0 +1,4 @@
+"""The paper's primary contribution: QLMIO + MGQP + MILP (+ baselines)."""
+from repro.core.d3qn import D3QNAgent, D3QNConfig  # noqa: F401
+from repro.core.predictors import Predictor, PredictorConfig  # noqa: F401
+from repro.core.qlmio import QLMIO, QLMIOConfig  # noqa: F401

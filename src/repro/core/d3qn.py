@@ -1,0 +1,202 @@
+"""Dueling Double Deep Q-Network (paper Sec. IV-B, Fig. 4).
+
+The evaluation network mirrors Fig. 4: the QLMIO multimodal extractor
+branches (text/image projections + per-server meta embeddings) fuse to a
+32-d representation, concatenated with the MILP-predicted latencies, the
+estimated queue loads (Eq. 19) and the MGQP success probabilities
+(3 x (E+1) scalars), through a 256-256 trunk into dueling value/advantage
+heads.  Q = V + A - mean(A)  (the paper's Eq. 22 prints "+ mean"; we follow
+the standard dueling estimator and the cited D3QN reference — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.spec import TensorSpec, init_params
+
+META_EMB = 16
+FUSED = 32
+TRUNK = 256
+
+
+def _lin(i, o):
+    return {"w": TensorSpec((i, o), (None, None), "normal", i ** -0.5),
+            "b": TensorSpec((o,), (None,), "zeros"),
+            "ln_s": TensorSpec((o,), (None,), "ones"),
+            "ln_b": TensorSpec((o,), (None,), "zeros")}
+
+
+def qnet_spec(n_actions: int, n_models: int, n_devices: int,
+              feat_dim: int = 768, use_task_features: bool = True):
+    spec = {
+        "emb_model": TensorSpec((n_models, META_EMB), (None, None),
+                                "normal", 0.02),
+        "emb_device": TensorSpec((n_devices, META_EMB), (None, None),
+                                 "normal", 0.02),
+        "fuse1": _lin((2 * 64 if use_task_features else 0)
+                      + n_actions * 2 * META_EMB, 64),
+        "fuse2": _lin(64, FUSED),
+        "trunk1": _lin(FUSED + 3 * n_actions, TRUNK),
+        "trunk2": _lin(TRUNK, TRUNK),
+        "value": {"w": TensorSpec((TRUNK, 1), (None, None), "normal",
+                                  TRUNK ** -0.5),
+                  "b": TensorSpec((1,), (None,), "zeros")},
+        "adv": {"w": TensorSpec((TRUNK, n_actions), (None, None), "normal",
+                                TRUNK ** -0.5),
+                "b": TensorSpec((n_actions,), (None,), "zeros")},
+    }
+    if use_task_features:
+        spec["proj_text"] = _lin(feat_dim, 64)
+        spec["proj_img"] = _lin(feat_dim, 64)
+    return spec
+
+
+def _apply_lin(p, x, act=True):
+    h = x @ p["w"] + p["b"]
+    hf = h.astype(jnp.float32)
+    mu, var = hf.mean(-1, keepdims=True), jnp.var(hf, -1, keepdims=True)
+    h = (hf - mu) * jax.lax.rsqrt(var + 1e-5) * p["ln_s"] + p["ln_b"]
+    return jax.nn.gelu(h) if act else h
+
+
+def q_values(params, state: dict) -> jnp.ndarray:
+    """state: f_text [B,D], f_img [B,D], model_ids [B,A], device_ids [B,A],
+    t_hat [B,A], q_load [B,A], b_hat [B,A]  ->  Q [B,A]."""
+    B, A = state["model_ids"].shape
+    branches = []
+    if "proj_text" in params:
+        branches.append(_apply_lin(params["proj_text"], state["f_text"]))
+        branches.append(_apply_lin(params["proj_img"], state["f_img"]))
+    em = params["emb_model"][state["model_ids"]].reshape(B, -1)
+    ed = params["emb_device"][state["device_ids"]].reshape(B, -1)
+    branches += [em, ed]
+    fused = _apply_lin(params["fuse2"],
+                       _apply_lin(params["fuse1"],
+                                  jnp.concatenate(branches, -1)))
+    x = jnp.concatenate([fused, state["t_hat"], state["q_load"],
+                         state["b_hat"]], -1)
+    h = _apply_lin(params["trunk2"], _apply_lin(params["trunk1"], x))
+    v = h @ params["value"]["w"] + params["value"]["b"]  # [B,1]
+    a = h @ params["adv"]["w"] + params["adv"]["b"]  # [B,A]
+    return v + a - a.mean(-1, keepdims=True)  # Eq. 22 (sign fixed)
+
+
+class Replay:
+    def __init__(self, capacity: int, state_shapes: dict):
+        self.capacity = capacity
+        self.n = 0
+        self.ptr = 0
+        self.buf = {k: np.zeros((capacity,) + tuple(s), dt)
+                    for k, (s, dt) in state_shapes.items()}
+
+    def add(self, rec: dict):
+        for k, v in rec.items():
+            self.buf[k][self.ptr] = v
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.n = min(self.n + 1, self.capacity)
+
+    def sample(self, batch: int, rng: np.random.Generator) -> dict:
+        idx = rng.integers(0, self.n, batch)
+        return {k: v[idx] for k, v in self.buf.items()}
+
+
+@dataclasses.dataclass
+class D3QNConfig:
+    lr: float = 1e-4  # paper Table IV
+    gamma: float = 0.95
+    batch: int = 256
+    train_interval: int = 5  # paper Table IV (S)
+    replay: int = 10_000  # paper Table IV (|M|)
+    tau: float = 0.005  # paper Table IV
+    eps_start: float = 1.0  # paper Table IV
+    eps_end: float = 0.05
+    eps_decay_steps: int = 30_000
+    seed: int = 0
+
+
+class D3QNAgent:
+    """Generic dueling-double-DQN over the Fig. 4 state."""
+
+    def __init__(self, n_actions: int, n_models: int, n_devices: int,
+                 cfg: D3QNConfig | None = None, feat_dim: int = 768,
+                 use_task_features: bool = True):
+        self.cfg = cfg or D3QNConfig()
+        self.n_actions = n_actions
+        key = jax.random.PRNGKey(self.cfg.seed)
+        spec = qnet_spec(n_actions, n_models, n_devices, feat_dim,
+                         use_task_features)
+        self.params = init_params(spec, key)
+        self.target = jax.tree.map(jnp.copy, self.params)
+        self.opt = {"m": jax.tree.map(jnp.zeros_like, self.params),
+                    "v": jax.tree.map(jnp.zeros_like, self.params),
+                    "t": jnp.zeros((), jnp.int32)}
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.step_count = 0
+        self._q_fn = jax.jit(q_values)
+        self._update_fn = jax.jit(self._update)
+
+    # ------------------------------------------------------------- acting
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.step_count / c.eps_decay_steps)
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def act(self, state: dict, greedy: bool = False) -> int:
+        if not greedy and self.rng.random() < self.epsilon():
+            return int(self.rng.integers(self.n_actions))
+        q = self._q_fn(self.params, {k: jnp.asarray(v)[None]
+                                     for k, v in state.items()})
+        return int(np.argmax(np.asarray(q)[0]))
+
+    # ------------------------------------------------------------- update
+    def _update(self, params, target, opt, batch):
+        c = self.cfg
+
+        def split(prefix):
+            return {k[len(prefix):]: jnp.asarray(v) for k, v in batch.items()
+                    if k.startswith(prefix)}
+
+        s, s2 = split("s_"), split("n_")
+        r = jnp.asarray(batch["reward"])
+        done = jnp.asarray(batch["done"]).astype(jnp.float32)
+        a = jnp.asarray(batch["action"])
+
+        # double DQN target
+        q_next_eval = q_values(params, s2)
+        a_star = jnp.argmax(q_next_eval, -1)
+        q_next_tgt = q_values(target, s2)
+        y = r + c.gamma * (1 - done) * jnp.take_along_axis(
+            q_next_tgt, a_star[:, None], 1)[:, 0]
+
+        def loss_fn(p):
+            q = q_values(p, s)
+            q_a = jnp.take_along_axis(q, a[:, None], 1)[:, 0]
+            err = q_a - jax.lax.stop_gradient(y)
+            return jnp.where(jnp.abs(err) <= 1.0, 0.5 * err * err,
+                             jnp.abs(err) - 0.5).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        t = opt["t"] + 1
+        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, opt["m"], g)
+        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_,
+                         opt["v"], g)
+        tf = t.astype(jnp.float32)
+        params = jax.tree.map(
+            lambda p_, m_, v_: p_ - c.lr * (m_ / (1 - 0.9 ** tf)) /
+            (jnp.sqrt(v_ / (1 - 0.999 ** tf)) + 1e-8), params, m, v)
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    def train_step(self, batch) -> float:
+        self.params, self.opt, loss = self._update_fn(
+            self.params, self.target, self.opt, batch)
+        return float(loss)
+
+    def soft_update(self):
+        t = self.cfg.tau
+        self.target = jax.tree.map(lambda tp, ep: t * ep + (1 - t) * tp,
+                                   self.target, self.params)

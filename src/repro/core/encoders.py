@@ -1,0 +1,181 @@
+"""Frozen pre-trained encoder architectures (paper Sec. IV-A, component 1).
+
+Exact architectures of ``google/vit-base-patch16-224`` and
+``distilbert-base-uncased`` in JAX.  The container is offline, so the
+pretrained weights are replaced by seeded random weights — frozen random
+transformers are valid (untrained-feature) encoders; the learnable
+projections / fusion / heads train on top exactly as in the paper.  This is
+documented as a fidelity deviation in DESIGN.md §4.
+
+``profile`` scales the encoder for CPU budget:
+  * "paper" — ViT-B/16 @ 224px (196+1 tokens), DistilBERT L=256
+  * "fast"  — same layer count/width, 64px images (16+1 tokens), L=64
+  * "tiny"  — 2 layers, width 128 (unit tests)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderProfile:
+    name: str
+    img_size: int
+    patch: int
+    vit_layers: int
+    vit_dim: int
+    vit_heads: int
+    vit_mlp: int
+    text_len: int
+    bert_layers: int
+    bert_dim: int
+    bert_heads: int
+    bert_mlp: int
+    bert_vocab: int
+
+
+PROFILES = {
+    "paper": EncoderProfile("paper", 224, 16, 12, 768, 12, 3072,
+                            256, 6, 768, 12, 3072, 30522),
+    "fast": EncoderProfile("fast", 64, 16, 12, 768, 12, 3072,
+                           64, 6, 768, 12, 3072, 30522),
+    "tiny": EncoderProfile("tiny", 32, 16, 2, 128, 4, 256,
+                           16, 2, 128, 4, 256, 1024),
+}
+
+
+def _tx_layer_spec(L, d, mlp):
+    def t(shape, init="normal", scale=None):
+        return TensorSpec((L,) + shape, ("layers",) + (None,) * len(shape),
+                          init, scale)
+
+    return {
+        "ln1_s": t((d,), "ones"), "ln1_b": t((d,), "zeros"),
+        "ln2_s": t((d,), "ones"), "ln2_b": t((d,), "zeros"),
+        "wq": t((d, d), scale=d ** -0.5), "bq": t((d,), "zeros"),
+        "wk": t((d, d), scale=d ** -0.5), "bk": t((d,), "zeros"),
+        "wv": t((d, d), scale=d ** -0.5), "bv": t((d,), "zeros"),
+        "wo": t((d, d), scale=d ** -0.5), "bo": t((d,), "zeros"),
+        "w1": t((d, mlp), scale=d ** -0.5), "b1": t((mlp,), "zeros"),
+        "w2": t((mlp, d), scale=mlp ** -0.5), "b2": t((d,), "zeros"),
+    }
+
+
+def vit_spec(p: EncoderProfile):
+    n_patches = (p.img_size // p.patch) ** 2
+    return {
+        "patch_proj": TensorSpec((p.patch * p.patch * 3, p.vit_dim),
+                                 (None, None), "normal",
+                                 (p.patch * p.patch * 3) ** -0.5),
+        "patch_bias": TensorSpec((p.vit_dim,), (None,), "zeros"),
+        "cls": TensorSpec((p.vit_dim,), (None,), "normal", 0.02),
+        "pos": TensorSpec((n_patches + 1, p.vit_dim), (None, None),
+                          "normal", 0.02),
+        "layers": _tx_layer_spec(p.vit_layers, p.vit_dim, p.vit_mlp),
+        "lnf_s": TensorSpec((p.vit_dim,), (None,), "ones"),
+        "lnf_b": TensorSpec((p.vit_dim,), (None,), "zeros"),
+    }
+
+
+def bert_spec(p: EncoderProfile):
+    return {
+        "tok": TensorSpec((p.bert_vocab, p.bert_dim), (None, None),
+                          "normal", 0.02),
+        "pos": TensorSpec((p.text_len, p.bert_dim), (None, None),
+                          "normal", 0.02),
+        "emb_ln_s": TensorSpec((p.bert_dim,), (None,), "ones"),
+        "emb_ln_b": TensorSpec((p.bert_dim,), (None,), "zeros"),
+        "layers": _tx_layer_spec(p.bert_layers, p.bert_dim, p.bert_mlp),
+    }
+
+
+def _ln(x, s, b):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-12) * s + b).astype(x.dtype)
+
+
+def _tx_stack(params, x, heads, mask=None, post_ln=True):
+    """Post-LN (BERT) or pre-LN (ViT) encoder stack via scan."""
+    B, S, d = x.shape
+    dh = d // heads
+
+    def attn(pl, xin):
+        q = (xin @ pl["wq"] + pl["bq"]).reshape(B, S, heads, dh)
+        k = (xin @ pl["wk"] + pl["bk"]).reshape(B, S, heads, dh)
+        v = (xin @ pl["wv"] + pl["bv"]).reshape(B, S, heads, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh ** -0.5
+        if mask is not None:
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, d)
+        return o @ pl["wo"] + pl["bo"]
+
+    def body(x, pl):
+        if post_ln:  # BERT
+            a = attn(pl, x)
+            x = _ln(x + a, pl["ln1_s"], pl["ln1_b"])
+            h = jax.nn.gelu(x @ pl["w1"] + pl["b1"]) @ pl["w2"] + pl["b2"]
+            x = _ln(x + h, pl["ln2_s"], pl["ln2_b"])
+        else:  # ViT pre-LN
+            a = attn(pl, _ln(x, pl["ln1_s"], pl["ln1_b"]))
+            x = x + a
+            xn = _ln(x, pl["ln2_s"], pl["ln2_b"])
+            h = jax.nn.gelu(xn @ pl["w1"] + pl["b1"]) @ pl["w2"] + pl["b2"]
+            x = x + h
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x
+
+
+def vit_encode(params, images, p: EncoderProfile):
+    """images [B, H, W, 3] -> [CLS] feature [B, vit_dim]  (Eq. 8)."""
+    B = images.shape[0]
+    ph = p.img_size // p.patch
+    x = images.reshape(B, ph, p.patch, ph, p.patch, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, ph * ph, -1)
+    x = x @ params["patch_proj"] + params["patch_bias"]
+    cls = jnp.broadcast_to(params["cls"], (B, 1, p.vit_dim))
+    x = jnp.concatenate([cls, x], 1) + params["pos"][None]
+    x = _tx_stack(params, x, p.vit_heads, post_ln=False)
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    return x[:, 0]
+
+
+def bert_encode(params, token_ids, attn_mask, p: EncoderProfile):
+    """token_ids [B, L] -> mean-pooled feature [B, bert_dim]  (Eqs. 6-7)."""
+    B, L = token_ids.shape
+    x = params["tok"][token_ids] + params["pos"][None, :L]
+    x = _ln(x, params["emb_ln_s"], params["emb_ln_b"])
+    x = _tx_stack(params, x, p.bert_heads, mask=attn_mask.astype(bool),
+                  post_ln=True)
+    m = attn_mask.astype(jnp.float32)[..., None]
+    return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+
+
+@functools.lru_cache(maxsize=4)
+def frozen_encoders(profile: str = "fast", seed: int = 0):
+    """(vit_params, bert_params, profile) with seeded frozen weights."""
+    p = PROFILES[profile]
+    key = jax.random.PRNGKey(seed)
+    kv, kb = jax.random.split(key)
+    vit = init_params(vit_spec(p), kv, jnp.float32)
+    bert = init_params(bert_spec(p), kb, jnp.float32)
+    return vit, bert, p
+
+
+def encode_batch(images, token_ids, attn_mask, *, profile: str = "fast",
+                 seed: int = 0):
+    """Frozen forward: returns (f_img [B,768], f_text [B,768])."""
+    vit, bert, p = frozen_encoders(profile, seed)
+    f_i = jax.jit(vit_encode, static_argnums=2)(vit, images, p)
+    f_t = jax.jit(bert_encode, static_argnums=3)(bert, token_ids, attn_mask, p)
+    return f_i, f_t

@@ -1,0 +1,70 @@
+"""Universal multimodal feature extractor (paper Sec. IV-A, Fig. 3).
+
+Four branches — frozen ViT [CLS] feature, frozen DistilBERT mean-pooled
+feature, model-type embedding, device-type embedding — projected to a common
+64-d space (Eqs. 9-12) and fused by a two-layer MLP (Eq. 13).
+
+The frozen encoder outputs are precomputed once per task (they never change),
+so training only runs these learnable parts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec, init_params
+
+PROJ_DIM = 64
+META_DIM = 32
+FUSED_DIM = 64
+
+
+def extractor_spec(feat_dim: int = 768, n_models: int = 8,
+                   n_devices: int = 8):
+    def lin(i, o):
+        return {"w": TensorSpec((i, o), (None, None), "normal", i ** -0.5),
+                "b": TensorSpec((o,), (None,), "zeros"),
+                "ln_s": TensorSpec((o,), (None,), "ones"),
+                "ln_b": TensorSpec((o,), (None,), "zeros")}
+
+    return {
+        "proj_text": lin(feat_dim, PROJ_DIM),
+        "proj_img": lin(feat_dim, PROJ_DIM),
+        "emb_model": TensorSpec((n_models, META_DIM), (None, None),
+                                "normal", 0.02),
+        "emb_device": TensorSpec((n_devices, META_DIM), (None, None),
+                                 "normal", 0.02),
+        "fuse1": lin(3 * PROJ_DIM, FUSED_DIM),
+        "fuse2": lin(FUSED_DIM, FUSED_DIM),
+    }
+
+
+def _proj(p, x, key, dropout, deterministic):
+    h = x @ p["w"] + p["b"]
+    hf = h.astype(jnp.float32)
+    mu, var = hf.mean(-1, keepdims=True), jnp.var(hf, -1, keepdims=True)
+    h = (hf - mu) * jax.lax.rsqrt(var + 1e-5) * p["ln_s"] + p["ln_b"]
+    h = jax.nn.gelu(h)
+    if not deterministic and dropout > 0:
+        keep = jax.random.bernoulli(key, 1 - dropout, h.shape)
+        h = jnp.where(keep, h / (1 - dropout), 0.0)
+    return h
+
+
+def extract(params, f_text, f_img, model_id, device_id, *, key=None,
+            dropout: float = 0.1, deterministic: bool = True):
+    """-> fused feature [B, 64]  (Eq. 13)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ft = _proj(params["proj_text"], f_text, k1, dropout, deterministic)
+    fi = _proj(params["proj_img"], f_img, k2, dropout, deterministic)
+    fm = params["emb_model"][model_id]
+    fd = params["emb_device"][device_id]
+    cat = jnp.concatenate([ft, fi, fm, fd], -1)
+    h = _proj(params["fuse1"], cat, k3, dropout, deterministic)
+    return _proj(params["fuse2"], h, k4, dropout, deterministic)
+
+
+def init_extractor(key, feat_dim=768, n_models=8, n_devices=8):
+    return init_params(extractor_spec(feat_dim, n_models, n_devices), key)

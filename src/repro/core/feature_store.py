@@ -1,0 +1,42 @@
+"""Per-task frozen encoder features, computed once and cached.
+
+The frozen ViT/DistilBERT outputs never change, so MGQP/MILP/QLMIO training
+only needs the cached 768-d features per task.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.core.encoders import PROFILES, bert_encode, frozen_encoders, vit_encode
+from repro.data.taskgen import TaskSet
+
+
+def compute_features(tasks: TaskSet, profile: str = "fast", batch: int = 128,
+                     cache_dir: str | None = "results/cache",
+                     seed: int = 0):
+    """-> (f_img [N, D], f_text [N, D]) float32."""
+    p = PROFILES[profile]
+    tag = f"feats_{profile}_{tasks.seed}_{tasks.n}_{seed}.npz"
+    path = os.path.join(cache_dir, tag) if cache_dir else None
+    if path and os.path.exists(path):
+        z = np.load(path)
+        return z["f_img"], z["f_text"]
+    vit, bert, _ = frozen_encoders(profile, seed)
+    vit_fn = jax.jit(lambda pr, im: vit_encode(pr, im, p))
+    bert_fn = jax.jit(lambda pr, t, m: bert_encode(pr, t, m, p))
+    f_img, f_text = [], []
+    for s in range(0, tasks.n, batch):
+        idx = np.arange(s, min(s + batch, tasks.n))
+        imgs = tasks.images(idx, p.img_size)
+        toks, masks = tasks.texts(idx, p.text_len, p.bert_vocab)
+        f_img.append(np.asarray(vit_fn(vit, imgs)))
+        f_text.append(np.asarray(bert_fn(bert, toks, masks)))
+    f_img = np.concatenate(f_img).astype(np.float32)
+    f_text = np.concatenate(f_text).astype(np.float32)
+    if path:
+        os.makedirs(cache_dir, exist_ok=True)
+        np.savez_compressed(path, f_img=f_img, f_text=f_text)
+    return f_img, f_text

@@ -1,0 +1,176 @@
+"""MGQP (generation-quality) and MILP (inference-latency) predictors
+(paper Sec. IV-A) with their training loops.
+
+MGQP: extractor -> 2-layer head -> 2-way logits, Focal loss (Eq. 15).
+MILP: extractor -> 2-layer head -> scalar latency [s], Huber loss (Eq. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import extractor as ex
+from repro.nn.spec import TensorSpec, init_params
+
+
+def head_spec(out_dim: int):
+    return {
+        "w1": TensorSpec((ex.FUSED_DIM, 32), (None, None), "normal",
+                         ex.FUSED_DIM ** -0.5),
+        "b1": TensorSpec((32,), (None,), "zeros"),
+        "w2": TensorSpec((32, out_dim), (None, None), "normal", 32 ** -0.5),
+        "b2": TensorSpec((out_dim,), (None,), "zeros"),
+    }
+
+
+def head_apply(p, f, *, key=None, dropout=0.1, deterministic=True):
+    h = jax.nn.gelu(f @ p["w1"] + p["b1"])
+    if not deterministic and dropout > 0:
+        keep = jax.random.bernoulli(key, 1 - dropout, h.shape)
+        h = jnp.where(keep, h / (1 - dropout), 0.0)
+    return h @ p["w2"] + p["b2"]
+
+
+def focal_loss(logits, labels, *, alpha: float, gamma: float = 2.0):
+    """Eq. 15 — labels in {0,1}; alpha weights the positive class."""
+    logp = jax.nn.log_softmax(logits, -1)
+    p_t = jnp.exp(jnp.take_along_axis(logp, labels[:, None], 1))[:, 0]
+    log_pt = jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+    a_t = jnp.where(labels == 1, alpha, 1.0 - alpha)
+    return -(a_t * (1 - p_t) ** gamma * log_pt).mean()
+
+
+def huber_loss(pred, target, *, delta: float = 1.0):
+    """Eq. 17."""
+    r = pred - target
+    ar = jnp.abs(r)
+    return jnp.where(ar <= delta, 0.5 * r * r,
+                     delta * ar - 0.5 * delta * delta).mean()
+
+
+@dataclasses.dataclass
+class PredictorConfig:
+    lr: float = 1e-3
+    epochs: int = 50
+    batch: int = 256
+    dropout: float = 0.1
+    gamma: float = 2.0  # focal
+    delta: float = 1.0  # huber
+    seed: int = 0
+    log_t: bool = True  # regress log1p(latency_s) for the heavy tail
+
+
+class Predictor:
+    """Shared driver for MGQP (kind='quality') / MILP (kind='latency')."""
+
+    def __init__(self, kind: str, n_models: int, n_devices: int,
+                 cfg: PredictorConfig | None = None, feat_dim: int = 768):
+        assert kind in ("quality", "latency")
+        self.kind = kind
+        self.cfg = cfg or PredictorConfig()
+        key = jax.random.PRNGKey(self.cfg.seed)
+        k1, k2 = jax.random.split(key)
+        self.params = {
+            "ext": ex.init_extractor(k1, feat_dim, n_models, n_devices),
+            "head": init_params(head_spec(2 if kind == "quality" else 1), k2),
+        }
+        self._alpha = 0.5
+
+    # ------------------------------------------------------------ forward
+    def _raw(self, params, batch, key=None, deterministic=True):
+        f = ex.extract(params["ext"], batch["f_text"], batch["f_img"],
+                       batch["model_id"], batch["device_id"], key=key,
+                       dropout=self.cfg.dropout, deterministic=deterministic)
+        return head_apply(params["head"], f, key=key,
+                          dropout=self.cfg.dropout,
+                          deterministic=deterministic)
+
+    def predict(self, batch) -> np.ndarray:
+        """quality -> P(success) [B]; latency -> seconds [B]."""
+        out = jax.jit(self._raw)(self.params, batch)
+        if self.kind == "quality":
+            return np.asarray(jax.nn.softmax(out, -1)[:, 1])
+        t = np.asarray(out[:, 0])
+        return np.expm1(t) if self.cfg.log_t else t
+
+    # ------------------------------------------------------------ training
+    def _loss(self, params, batch, key):
+        out = self._raw(params, batch, key=key, deterministic=False)
+        if self.kind == "quality":
+            return focal_loss(out, batch["label"], alpha=self._alpha,
+                              gamma=self.cfg.gamma)
+        target = batch["latency_s"]
+        if self.cfg.log_t:
+            target = jnp.log1p(target)
+        return huber_loss(out[:, 0], target, delta=self.cfg.delta)
+
+    def fit(self, data: dict, val: dict | None = None, verbose=False
+            ) -> "list[dict[str, Any]]":
+        """data: arrays f_text [N,768], f_img [N,768], model_id, device_id,
+        label / latency_s.  Returns per-epoch history."""
+        cfg = self.cfg
+        n = len(data["model_id"])
+        if self.kind == "quality":
+            pos = float((np.asarray(data["label"]) == 1).mean())
+            self._alpha = 1.0 - pos  # weight positives by class imbalance
+
+        opt = {"m": jax.tree.map(jnp.zeros_like, self.params),
+               "v": jax.tree.map(jnp.zeros_like, self.params),
+               "t": jnp.zeros((), jnp.int32)}
+
+        @jax.jit
+        def step(params, opt, batch, key):
+            loss, g = jax.value_and_grad(self._loss)(params, batch, key)
+            t = opt["t"] + 1
+            m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, opt["m"], g)
+            v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_,
+                             opt["v"], g)
+            tf = t.astype(jnp.float32)
+            params = jax.tree.map(
+                lambda p, m_, v_: p - cfg.lr * (m_ / (1 - 0.9 ** tf)) /
+                (jnp.sqrt(v_ / (1 - 0.999 ** tf)) + 1e-8), params, m, v)
+            return params, {"m": m, "v": v, "t": t}, loss
+
+        rng = np.random.default_rng(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        hist = []
+        for epoch in range(cfg.epochs):
+            order = rng.permutation(n)
+            losses = []
+            for s in range(0, n - cfg.batch + 1, cfg.batch):
+                idx = order[s:s + cfg.batch]
+                batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+                key, sub = jax.random.split(key)
+                self.params, opt, loss = step(self.params, opt, batch, sub)
+                losses.append(float(loss))
+            rec = {"epoch": epoch, "train_loss": float(np.mean(losses))}
+            rec.update(self.evaluate(data, prefix="train_"))
+            if val is not None:
+                rec.update(self.evaluate(val, prefix="val_"))
+            hist.append(rec)
+            if verbose:
+                print(rec, flush=True)
+        return hist
+
+    def evaluate(self, data: dict, prefix="") -> dict:
+        batch = {k: jnp.asarray(v) for k, v in data.items()}
+        if self.kind == "quality":
+            p = self.predict(batch)
+            pred = (p > 0.5).astype(np.int32)
+            lab = np.asarray(data["label"])
+            acc = float((pred == lab).mean())
+            logits = jax.jit(self._raw)(self.params, batch)
+            loss = float(focal_loss(logits, jnp.asarray(lab),
+                                    alpha=self._alpha, gamma=self.cfg.gamma))
+            return {prefix + "acc": acc, prefix + "loss": loss}
+        t = self.predict(batch)
+        lat = np.asarray(data["latency_s"])
+        mae = float(np.abs(t - lat).mean())
+        tt = jnp.log1p(jnp.asarray(lat)) if self.cfg.log_t else jnp.asarray(lat)
+        out = jax.jit(self._raw)(self.params, batch)
+        loss = float(huber_loss(out[:, 0], tt, delta=self.cfg.delta))
+        return {prefix + "mae_s": mae, prefix + "loss": loss}

@@ -1,0 +1,1 @@
+from repro.data.taskgen import CATEGORIES, TaskSet, make_taskset  # noqa: F401

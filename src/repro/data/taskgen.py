@@ -1,0 +1,95 @@
+"""Synthetic MMBench-like multimodal task set.
+
+MMBench itself (3,377 image+text choice questions, 20 task categories) is not
+available offline; we generate a statistically matched stand-in: per-category
+difficulty distributions, prompt-length distributions, and procedural images
+whose statistics (edges, texture, entropy) vary with category and difficulty.
+Seeded and fully deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+CATEGORIES = [
+    "action_recognition", "attribute_comparison", "attribute_recognition",
+    "celebrity_recognition", "function_reasoning", "future_prediction",
+    "identity_reasoning", "image_emotion", "image_quality", "image_scene",
+    "image_style", "image_topic", "nature_relation", "object_localization",
+    "ocr", "physical_property", "physical_relation", "social_relation",
+    "spatial_relationship", "structuralized_image_text",
+]
+
+N_TASKS = 3377  # match MMBench
+
+
+@dataclasses.dataclass
+class TaskSet:
+    n: int
+    category: np.ndarray  # [n] int
+    difficulty: np.ndarray  # [n] float in (0,1)
+    text_len: np.ndarray  # [n] int (prompt tokens)
+    image_entropy: np.ndarray  # [n] float
+    seed: int
+
+    def text_tokens(self, idx: int, max_len: int, vocab: int) -> np.ndarray:
+        """Deterministic per-task DistilBERT-style token ids + mask."""
+        rng = np.random.default_rng(self.seed * 1_000_003 + idx)
+        L = min(int(self.text_len[idx]), max_len)
+        # category-biased token distribution (zipf-ish)
+        base = 1000 + int(self.category[idx]) * 700
+        ids = base + rng.zipf(1.6, size=L) % (vocab - base - 1)
+        out = np.zeros(max_len, np.int32)
+        out[:L] = np.minimum(ids, vocab - 1)
+        mask = np.zeros(max_len, np.int32)
+        mask[:L] = 1
+        return out, mask
+
+    def image(self, idx: int, size: int) -> np.ndarray:
+        """Procedural [size,size,3] image in [0,1]: gradient + blobs + noise,
+        with edge density tied to category and noise to difficulty."""
+        rng = np.random.default_rng(self.seed * 2_000_003 + idx)
+        cat = int(self.category[idx])
+        dif = float(self.difficulty[idx])
+        yy, xx = np.mgrid[0:size, 0:size] / size
+        img = np.stack([
+            0.5 + 0.5 * np.sin(2 * np.pi * (xx * (1 + cat % 5))),
+            0.5 + 0.5 * np.cos(2 * np.pi * (yy * (1 + cat % 3))),
+            np.full_like(xx, 0.3 + 0.02 * cat),
+        ], -1)
+        for _ in range(2 + cat % 4):  # blobs = objects
+            cx, cy, r = rng.random(), rng.random(), 0.08 + 0.2 * rng.random()
+            m = ((xx - cx) ** 2 + (yy - cy) ** 2) < r * r
+            img[m] = rng.random(3)
+        img += rng.normal(0, 0.05 + 0.25 * dif, img.shape)  # difficulty noise
+        return np.clip(img, 0, 1).astype(np.float32)
+
+    def images(self, idxs, size: int) -> np.ndarray:
+        return np.stack([self.image(int(i), size) for i in idxs])
+
+    def texts(self, idxs, max_len: int, vocab: int):
+        toks, masks = zip(*[self.text_tokens(int(i), max_len, vocab)
+                            for i in idxs])
+        return np.stack(toks), np.stack(masks)
+
+
+def make_taskset(n: int = N_TASKS, seed: int = 0) -> TaskSet:
+    rng = np.random.default_rng(seed)
+    category = rng.integers(0, len(CATEGORIES), n)
+    # per-category base difficulty + per-task Beta spread
+    cat_base = rng.uniform(0.25, 0.75, len(CATEGORIES))
+    difficulty = np.clip(
+        cat_base[category] + 0.35 * (rng.beta(2, 2, n) - 0.5), 0.02, 0.98)
+    text_len = np.clip(rng.lognormal(3.6, 0.5, n), 8, 256).astype(np.int64)
+    image_entropy = 0.3 + 0.6 * difficulty + rng.normal(0, 0.05, n)
+    return TaskSet(n, category, difficulty, text_len, image_entropy, seed)
+
+
+def splits(n: int, seed: int = 0, ratios=(0.8, 0.1, 0.1)):
+    """train/val/test index split (paper: 8:1:1)."""
+    rng = np.random.default_rng(seed + 99)
+    order = rng.permutation(n)
+    n_tr = int(ratios[0] * n)
+    n_va = int(ratios[1] * n)
+    return order[:n_tr], order[n_tr:n_tr + n_va], order[n_tr + n_va:]

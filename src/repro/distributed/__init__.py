@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingPlan,
+    abstract_opt_state,
+    make_plan,
+)

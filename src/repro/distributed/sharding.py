@@ -1,0 +1,188 @@
+"""Named-axis sharding rules per (arch x shape x mesh).
+
+Logical axes (see repro/nn/spec.py) map to mesh axes per arch, with per-leaf
+divisibility checks: a mesh axis is only used on a dim whose size it divides,
+so no GSPMD padding is ever silently introduced.
+
+Baseline plan (hillclimb variants layer on top, see EXPERIMENTS.md §Perf):
+  * batch        -> (pod?, data)
+  * heads/kv/mlp/vocab/experts -> model (tensor/expert parallelism)
+  * optimizer state (fp32 m/v/master) additionally sharded over data on the
+    first free divisible dim (ZeRO-1)
+  * KV caches: batch -> data; kv_heads -> model when divisible, else cache
+    sequence -> model (flash-decode-style KV-sequence sharding)
+  * long_500k (batch=1): cache sequence -> (data, model) or (data,)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.nn.spec import TensorSpec, tree_map_specs
+
+Tree = Any
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _leaf_pspec(spec: TensorSpec, rules: dict, mesh: Mesh) -> P:
+    used: set = set()
+    out = []
+    for dim, name in zip(spec.shape, spec.axes):
+        mesh_axis = rules.get(name)
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if (mesh_axis is None or any(a in used for a in flat)
+                or dim % _axis_size(mesh, mesh_axis) != 0):
+            out.append(None)
+        else:
+            used.update(flat)
+            out.append(mesh_axis)
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    batch_axes: tuple  # mesh axes carrying the batch dim
+    rules: dict  # logical axis -> mesh axis (params/activations)
+
+    # ------------------------------------------------------------ params
+    def params(self, spec_tree: Tree) -> Tree:
+        return tree_map_specs(
+            lambda _p, s: NamedSharding(self.mesh, _leaf_pspec(s, self.rules,
+                                                               self.mesh)),
+            spec_tree)
+
+    def opt_state(self, spec_tree: Tree):
+        """ZeRO-1: m/v/master take the param pspec plus `data` on the first
+        free divisible dim."""
+        data_sz = _axis_size(self.mesh, self.batch_axes)
+
+        def one(_path, s: TensorSpec):
+            ps = list(_leaf_pspec(s, self.rules, self.mesh))
+            for i, (dim, cur) in enumerate(zip(s.shape, ps)):
+                if cur is None and dim % data_sz == 0 and dim > 0:
+                    ps[i] = self.batch_axes
+                    break
+            return NamedSharding(self.mesh, P(*ps))
+
+        from repro.train.optimizer import AdamWState
+        f32 = tree_map_specs(one, spec_tree)
+        scalar = NamedSharding(self.mesh, P())
+        return AdamWState(scalar, f32, tree_map_specs(one, spec_tree),
+                          tree_map_specs(one, spec_tree))
+
+    # ------------------------------------------------------------ batches
+    def batch(self, batch_tree: Tree) -> Tree:
+        def one(leaf):
+            b = leaf.shape[0] if leaf.ndim else 0
+            ax = self.batch_axes if b and b % _axis_size(
+                self.mesh, self.batch_axes) == 0 else None
+            rest = [None] * (leaf.ndim - 1)
+            return NamedSharding(self.mesh, P(ax, *rest))
+
+        return jax.tree.map(one, batch_tree)
+
+    # ------------------------------------------------------------ caches
+    def cache(self, cfg: ArchConfig, cache_tree: dict) -> dict:
+        mesh = self.mesh
+        model_sz = _axis_size(mesh, "model")
+        data_ax = self.batch_axes
+
+        data_sz = _axis_size(mesh, data_ax)
+        data_flat = data_ax if isinstance(data_ax, tuple) else (data_ax,)
+
+        def shard_cache_leaf(name, leaf):
+            shp = leaf.shape
+            if name in ("k", "v", "xk", "xv"):
+                # [L?, B, S, Hkv, Dh]
+                Ld = leaf.ndim - 4
+                B, S, Hkv = shp[Ld], shp[Ld + 1], shp[Ld + 2]
+                ps = [None] * Ld
+                b_ok = B % data_sz == 0
+                ps.append(data_ax if b_ok else None)
+                if Hkv % model_sz == 0:
+                    ps += [None, "model", None]
+                else:  # KV-sequence sharding (flash-decode style)
+                    seq_ax = ("model",) if b_ok else data_flat + ("model",)
+                    while seq_ax and S % _axis_size(mesh, seq_ax) != 0:
+                        seq_ax = seq_ax[1:]
+                    ps += [seq_ax or None, None, None]
+                return NamedSharding(mesh, P(*ps))
+            if name == "pos_map":
+                ps = [data_ax if shp[0] % data_sz == 0 else None, None]
+                return NamedSharding(mesh, P(*ps))
+            # recurrent states (mamba/xlstm): batch -> data; widest divisible
+            # trailing dim -> model
+            ps = [None] * leaf.ndim
+            b_idx = {"conv": 2, "ssm": 2, "mconv": 2, "mC": 2, "mn": 2,
+                     "mm": 2, "sc": 1, "sn": 1, "sm": 1, "sh": 1}.get(name, 0)
+            if shp[b_idx] % data_sz == 0:
+                ps[b_idx] = data_ax
+            best, best_dim = None, 0
+            for i in range(leaf.ndim - 1, b_idx, -1):
+                if ps[i] is None and shp[i] % model_sz == 0 and shp[i] > best_dim:
+                    best, best_dim = i, shp[i]
+            if best is not None:
+                ps[best] = "model"
+            return NamedSharding(mesh, P(*ps))
+
+        return {k: shard_cache_leaf(k, v) for k, v in cache_tree.items()}
+
+    def logits(self):
+        return NamedSharding(self.mesh, P(self.batch_axes, None))
+
+
+def make_plan(cfg: ArchConfig, mesh: Mesh, *, rules_override: dict | None = None
+              ) -> ShardingPlan:
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    model_sz = mesh.shape["model"]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rules = {
+        "embed": None,
+        "layers": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model" if cfg.n_experts and cfg.n_experts % model_sz == 0
+        else None,
+        "heads": "model" if (H * Dh) % model_sz == 0 and H % model_sz == 0
+        else None,
+        "kv_heads": "model" if (Hkv * Dh) % model_sz == 0 and
+        Hkv % model_sz == 0 else None,
+        "state": None,
+        "conv": None,
+        "batch": batch_axes,
+        None: None,
+    }
+    if cfg.n_experts and rules["experts"] is None:
+        # 60 experts on a 16-wide model axis: fall back to sharding the
+        # per-expert ff dim (kept small) -> keep mlp rule
+        pass
+    if rules_override:
+        rules.update(rules_override)
+        batch_axes = rules["batch"]  # may be overridden (e.g. pure-DP plan)
+    return ShardingPlan(mesh=mesh, batch_axes=batch_axes, rules=rules)
+
+
+def abstract_opt_state(abstract_params_tree: Tree):
+    """ShapeDtypeStructs for AdamWState(step, m, v, master) with fp32 moments."""
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, np.float32),
+        abstract_params_tree)
+    step = jax.ShapeDtypeStruct((), np.int32)
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step, f32, jax.tree.map(lambda x: x, f32),
+                      jax.tree.map(lambda x: x, f32))

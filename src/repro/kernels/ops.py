@@ -1,0 +1,44 @@
+"""Jit'd kernel entry points with automatic CPU-interpret fallback.
+
+On TPU these run the Mosaic-compiled Pallas kernels; on this CPU container
+they run the same kernel bodies under ``interpret=True`` (Python execution,
+bit-compatible semantics) so every kernel is correctness-tested offline.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.flash_decode import flash_decode_tpu
+from repro.kernels.mamba2_scan import ssd_scan_tpu
+from repro.kernels.moe_gmm import grouped_matmul_tpu
+from repro.kernels.rmsnorm import rmsnorm_tpu
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return flash_attention_tpu(q, k, v, **kw)
+
+
+def flash_decode(q, k_cache, v_cache, cache_positions, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return flash_decode_tpu(q, k_cache, v_cache, cache_positions, pos, **kw)
+
+
+def ssd_scan(x, dt, a_neg, B, C, **kw):
+    kw.setdefault("interpret", _interpret())
+    return ssd_scan_tpu(x, dt, a_neg, B, C, **kw)
+
+
+def grouped_matmul(x, w, **kw):
+    kw.setdefault("interpret", _interpret())
+    return grouped_matmul_tpu(x, w, **kw)
+
+
+def rmsnorm(x, scale, **kw):
+    kw.setdefault("interpret", _interpret())
+    return rmsnorm_tpu(x, scale, **kw)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as _decode_ref
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    return reference_attention(q, k, v, causal=causal, window=window)
+
+
+def flash_decode_ref(q, k_cache, v_cache, cache_positions, pos, *, window=0):
+    return _decode_ref(q, k_cache, v_cache, cache_positions, pos,
+                       window=window)
+
+
+def ssd_scan_ref(x, dt, a_neg, B, C):
+    """Sequential per-token SSD recurrence (repro.models.mamba2 oracle)."""
+    from repro.models.mamba2 import ssd_reference
+    y, _ = ssd_reference(x, dt, a_neg, B, C)
+    return y
+
+
+def grouped_matmul_ref(x, w):
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps=1e-6, zero_centered=False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    s = scale.astype(jnp.float32)
+    if zero_centered:
+        s = s + 1.0
+    return (xf * jax.lax.rsqrt(var + eps) * s).astype(x.dtype)

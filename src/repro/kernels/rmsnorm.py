@@ -1,0 +1,43 @@
+"""Pallas TPU fused RMSNorm: one pass over rows, fp32 accumulation in-kernel
+(no separate mean/rsqrt/mul HLO round-trips through HBM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float, zero_centered: bool):
+    x = x_ref[...].astype(jnp.float32)  # [bt, d]
+    var = jnp.mean(x * x, -1, keepdims=True)
+    scale = s_ref[...].astype(jnp.float32)
+    if zero_centered:
+        scale = scale + 1.0
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "zero_centered",
+                                             "block_t", "interpret"))
+def rmsnorm_tpu(x, scale, *, eps: float = 1e-6, zero_centered: bool = False,
+                block_t: int = 256, interpret: bool = False):
+    """x [..., d]; scale [d]."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    bt = min(block_t, T)
+    nt = -(-T // bt)
+    if nt * bt - T:
+        xf = jnp.pad(xf, ((0, nt * bt - T), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, zero_centered=zero_centered),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * bt, d), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:T].reshape(shape)

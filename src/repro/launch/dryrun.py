@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build ShapeDtypeStruct stand-ins (zero allocation), lower the
+appropriate entry point (train_step / prefill / serve_step) under explicit
+NamedShardings, compile, and record:
+  * memory_analysis()    — proves the cell fits per-device HBM
+  * cost_analysis()      — FLOPs / bytes for the roofline
+  * parsed collective bytes from the optimized HLO (repro.launch.hlo_analysis)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.sharding import abstract_opt_state, make_plan
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+
+
+def _metrics_shardings(mesh, metrics_keys=("loss", "grad_norm", "lr")):
+    return {k: NamedSharding(mesh, P()) for k in metrics_keys}
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               rules_override: dict | None = None, remat: bool = True,
+               extra_tag: str = "", cfg_overrides: dict | None = None,
+               seq_shard: bool = False):
+    """Returns (lowered, meta) for one cell (not yet compiled).
+
+    Hillclimb knobs: ``cfg_overrides`` (e.g. scan_chunk), ``seq_shard``
+    (context parallelism: activations' sequence dim sharded over `model`),
+    ``rules_override`` (logical-axis remapping).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch_id)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    plan = make_plan(cfg, mesh, rules_override=rules_override)
+    abs_params = model.abstract(jnp.bfloat16)
+    params_sh = plan.params(model.spec)
+    batch_abs = model.input_specs(shape)
+    batch_sh = plan.batch(batch_abs)
+    if seq_shard:  # context parallelism: tokens [B, S] -> (batch_axes, model)
+        def _seq(leaf, sh):
+            if leaf.ndim == 2 and leaf.shape[1] % mesh.shape["model"] == 0:
+                return NamedSharding(mesh, P(*sh.spec[:1], "model"))
+            return sh
+        batch_sh = jax.tree.map(_seq, batch_abs, batch_sh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_abs = abstract_opt_state(abs_params)
+            opt_sh = plan.opt_state(model.spec)
+            step = model.make_train_step()
+            fn = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh,
+                                        _metrics_shardings(mesh)),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(abs_params, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            fn = jax.jit(model.prefill, in_shardings=(params_sh, batch_sh))
+            lowered = fn.lower(abs_params, batch_abs)
+        else:  # decode
+            cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+            cache_sh = plan.cache(cfg, cache_abs)
+            fn = jax.jit(model.serve_step,
+                         in_shardings=(params_sh, cache_sh, batch_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(abs_params, cache_abs, batch_abs)
+    meta = {"arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind, "tag": extra_tag}
+    return lowered, meta
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             rules_override: dict | None = None, verbose: bool = True,
+             cfg_overrides: dict | None = None, seq_shard: bool = False,
+             tag: str = "") -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch_id, shape_name, multi_pod=multi_pod,
+                                   rules_override=rules_override,
+                                   cfg_overrides=cfg_overrides,
+                                   seq_shard=seq_shard, extra_tag=tag)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        hlo_dir = os.environ.get("DRYRUN_SAVE_HLO")
+        if hlo_dir:  # cache compiled HLO so analysis can be re-run offline
+            import zstandard
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag2 = f"{arch_id}_{shape_name}_{'multi' if multi_pod else 'single'}"
+            with open(os.path.join(hlo_dir, tag2 + ".hlo.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=3).compress(
+                    compiled.as_text().encode()))
+        roof, res = hlo_analysis.analyze(compiled)
+        mem = hlo_analysis.memory_analysis_dict(compiled)
+        n_chips = 512 if multi_pod else 256
+        rec = {**meta, "status": "ok",
+               "t_lower_s": round(t_lower, 1),
+               "t_compile_s": round(t_compile, 1),
+               "n_chips": n_chips,
+               "roofline": roof.as_dict(),
+               "collectives": res["collectives"],
+               "collective_counts": res["collective_counts"],
+               "memory": mem}
+        if verbose:
+            print(f"[dryrun] {arch_id} x {shape_name} x {rec['mesh']}: OK "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+                  f"bottleneck={roof.bottleneck})", flush=True)
+            if mem:
+                print(f"  memory_analysis: {mem}", flush=True)
+            print(f"  cost: flops/dev={roof.flops_per_device:.3e} "
+                  f"bytes/dev={roof.bytes_per_device:.3e} "
+                  f"coll/dev={roof.collective_bytes_per_device:.3e}",
+                  flush=True)
+        return rec
+    except Exception as e:  # a failure here is a bug in our sharding
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok" or r.get("status") == "skipped"}
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in done:
+                    print(f"[dryrun] {key} cached, skipping", flush=True)
+                    continue
+                rec = run_cell(arch, shape, multi_pod=mp)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

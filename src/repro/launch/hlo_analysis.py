@@ -1,0 +1,372 @@
+"""Roofline terms from a compiled (SPMD-partitioned) executable.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, ignoring the trip
+count — useless for scan-over-layers models.  We therefore parse the
+optimized post-partitioning HLO text ourselves and attribute:
+
+  * FLOPs            — every ``dot`` x 2 * prod(result dims) * prod(contracted
+                       lhs dims), multiplied by the call multiplicity of its
+                       computation (while bodies use ``known_trip_count``).
+  * HBM bytes        — per top-level op: operand + result sizes.  Ops inside
+                       fused computations are skipped (they live in
+                       registers/VMEM); the fusion itself counts its own
+                       operands/results.  This approximates true HBM traffic
+                       under XLA's fusion decisions.
+  * collective bytes — on-wire bytes per collective (all-reduce counts 2x:
+                       reduce-scatter + all-gather phases), with loop
+                       multiplicity.
+
+All quantities are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLS_RE = re.compile(r"(?:calls=|body=|to_apply=)%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    type_str: str
+    rhs: str
+    operands: list
+
+
+def _opcode_of(rhs: str) -> str:
+    # rhs looks like: "bf16[8,128]{1,0} dot(%a, %b), attrs" or
+    # "(f32[2], f32[3]) tuple(%x, %y)"
+    depth = 0
+    i = 0
+    # skip the type prefix (may contain parens for tuples)
+    if rhs.startswith("("):
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rest = rhs[i + 1:].strip()
+    else:
+        # type is like bf16[1,2]{1,0} — ends at first space
+        sp = rhs.find(" ")
+        rest = rhs[sp + 1:].strip() if sp > 0 else ""
+    m = re.match(r"([\w\-]+)\(", rest)
+    return m.group(1) if m else ""
+
+
+def parse_hlo(text: str):
+    """-> ({comp_name: [Op]}, entry_name)"""
+    comps: dict = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        h = _COMP_HDR.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if h and line.rstrip().endswith("{"):
+            cur = h.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            continue
+        m = _OP_RE.match(line)
+        if m and cur is not None:
+            name, rhs = m.group(1), m.group(2)
+            opcode = _opcode_of(rhs)
+            type_str = rhs.split(f" {opcode}(")[0] if opcode else rhs
+            paren = rhs.find(f"{opcode}(") if opcode else -1
+            args_str = ""
+            if paren >= 0:
+                depth = 0
+                for i in range(paren + len(opcode), len(rhs)):
+                    if rhs[i] == "(":
+                        depth += 1
+                    elif rhs[i] == ")":
+                        depth -= 1
+                        if depth == 0:
+                            args_str = rhs[paren + len(opcode) + 1:i]
+                            break
+            operands = _OPERANDS_RE.findall(args_str)
+            comps[cur].append(_Op(name, opcode, type_str, rhs, operands))
+    return comps, entry
+
+
+def _multiplicities(comps: dict, entry=None) -> dict:
+    """Call multiplicity per computation (ENTRY = 1; while bodies x trip)."""
+    if entry is None:
+        for name in comps:
+            if "main" in name:
+                entry = name
+    if entry is None:  # fall back: computation that nobody calls
+        called = set()
+        for ops in comps.values():
+            for op in ops:
+                called.update(_CALLS_RE.findall(op.rhs))
+                called.update(_COND_RE.findall(op.rhs))
+        entry = next((n for n in comps if n not in called), None)
+    mult = {name: 0.0 for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # propagate in topological-ish order (iterate until fixpoint; HLO call
+    # graphs are DAGs so a few passes suffice)
+    for _ in range(30):
+        changed = False
+        for name, ops in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for op in ops:
+                trip = 1.0
+                if op.opcode == "while":
+                    t = _TRIP_RE.search(op.rhs)
+                    trip = float(t.group(1)) if t else 1.0
+                targets = _CALLS_RE.findall(op.rhs)
+                targets += _COND_RE.findall(op.rhs)
+                b = _BRANCHES_RE.search(op.rhs)
+                if b:
+                    targets += _OPERANDS_RE.findall(b.group(1))
+                for t_name in targets:
+                    if t_name in mult:
+                        new = m * (trip if op.opcode == "while" else 1.0)
+                        if new > mult[t_name]:
+                            mult[t_name] = new
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    _, rdims = _result_dims(op.type_str)
+    out = 1.0
+    for d in rdims:
+        out *= d
+    m = _CONTRACT_RE.search(op.rhs)
+    contract = 1.0
+    if m and op.operands:
+        lhs_shape = shapes.get(op.operands[0], [])
+        for idx in m.group(1).split(","):
+            if idx.strip() and int(idx) < len(lhs_shape):
+                contract *= lhs_shape[int(idx)]
+    return 2.0 * out * contract
+
+
+_SKIP_BYTES = {"parameter", "get-tuple-element", "tuple", "constant",
+               "bitcast", "bitcast-convert", "reshape", "iota",
+               "after-all", "partition-id", "while", "conditional", "call",
+               "custom-call", ""}
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    mult = _multiplicities(comps, entry)
+    # symbol table: op name -> result dims (first shape in type)
+    shapes: dict = {}
+    fused = set()
+    for name, ops in comps.items():
+        for op in ops:
+            _, dims = _result_dims(op.type_str)
+            shapes[op.name] = dims
+            if op.opcode == "fusion":
+                for t in _CALLS_RE.findall(op.rhs):
+                    fused.add(t)
+
+    # op name -> total result bytes (tuples summed)
+    size_of = {}
+    for ops in comps.values():
+        for o in ops:
+            size_of[o.name] = _shape_bytes(o.type_str)
+
+    # fusion refinements (model TPU semantics, not CPU pessimism):
+    #  * a fusion whose root is dynamic-update-slice runs in place: traffic
+    #    = 2x the update operand, not the whole buffer
+    #  * a fusion parameter consumed ONLY via dynamic-slice reads just the
+    #    slice, not the full operand
+    fusion_root_dus = {}  # comp name -> update bytes
+    fusion_param_bytes = {}  # comp name -> {param_idx: bytes}
+    for cname, ops in comps.items():
+        params = {}
+        for o in ops:
+            if o.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.rhs)
+                if m:
+                    params[o.name] = int(m.group(1))
+        users: dict = {}
+        for o in ops:
+            for a in o.operands:
+                users.setdefault(a, []).append(o)
+        pb = {}
+        for pname, pidx in params.items():
+            us = users.get(pname, [])
+            if us and all(u.opcode == "dynamic-slice" for u in us):
+                pb[pidx] = sum(_shape_bytes(u.type_str) for u in us)
+        if pb:
+            fusion_param_bytes[cname] = pb
+        if ops and ops[-1].opcode == "dynamic-update-slice":
+            root = ops[-1]
+            upd = size_of.get(root.operands[1], 0) \
+                if len(root.operands) > 1 else 0
+            fusion_root_dus[cname] = 2 * upd
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0 for k in COLLECTIVES}
+    for cname, ops in comps.items():
+        m = mult.get(cname, 1.0)
+        in_fusion = cname in fused
+        for op in ops:
+            if op.opcode in ("dot", "dot-general"):
+                flops += m * _dot_flops(op, shapes)
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                payload = _shape_bytes(op.type_str)
+                coll[base] += m * payload * _WIRE_FACTOR[base]
+                coll_counts[base] += 1
+                hbm_bytes += m * payload
+                continue
+            if in_fusion or op.opcode in _SKIP_BYTES:
+                continue
+            if op.opcode == "dynamic-update-slice":
+                # in-place: traffic = read+write of the updated region only
+                upd = size_of.get(op.operands[1], 0) if len(op.operands) > 1 \
+                    else 0
+                hbm_bytes += m * 2 * upd
+                continue
+            if op.opcode == "dynamic-slice":
+                hbm_bytes += m * 2 * _shape_bytes(op.type_str)
+                continue
+            if op.opcode == "fusion":
+                callee = next(iter(_CALLS_RE.findall(op.rhs)), None)
+                pb = fusion_param_bytes.get(callee, {})
+                operand_bytes = sum(
+                    pb.get(i, size_of.get(a, 0))
+                    for i, a in enumerate(op.operands))
+                if callee in fusion_root_dus:  # in-place DUS fusion
+                    hbm_bytes += m * (fusion_root_dus[callee] + sum(
+                        pb.get(i, 0) for i in range(len(op.operands))))
+                else:
+                    hbm_bytes += m * (_shape_bytes(op.type_str)
+                                      + operand_bytes)
+                continue
+            operand_bytes = sum(size_of.get(a, 0) for a in op.operands)
+            hbm_bytes += m * (_shape_bytes(op.type_str) + operand_bytes)
+    total_coll = sum(coll.values())
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": total_coll,
+            "collectives": coll, "collective_counts": coll_counts}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total(self) -> float:  # no-overlap upper bound
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled) -> "tuple[Roofline, dict]":
+    res = analyze_hlo_text(compiled.as_text())
+    roof = Roofline(res["flops"], res["hbm_bytes"], res["collective_bytes"])
+    return roof, res
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:  # not supported on this backend
+        return {}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out

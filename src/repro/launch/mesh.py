@@ -1,0 +1,27 @@
+"""Production meshes (TPU v5e target).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one 256-chip v5e pod; 2x16x16 = two pods over DCI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_edge_mesh(n_chips: int = 4):
+    """Small mesh standing in for an edge-class server slice."""
+    return jax.make_mesh((1, n_chips), ("data", "model"))
+
+
+# v5e hardware constants (per chip) — used by the roofline and the analytic
+# cost model in repro/sim/cost_model.py
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

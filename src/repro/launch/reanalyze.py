@@ -1,0 +1,46 @@
+"""Re-run the HLO analysis over cached compiled HLO (results/hlo/*.hlo.zst)
+without recompiling — lets analyzer refinements update results/dryrun.json
+consistently.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze --hlo results/hlo \
+      --json results/dryrun.json
+"""
+import argparse
+import json
+import os
+
+import zstandard
+
+from repro.launch import hlo_analysis
+
+
+def reanalyze(hlo_dir: str, json_path: str):
+    recs = json.load(open(json_path))
+    n = 0
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        tag = (f"{r['arch']}_{r['shape']}_"
+               f"{'multi' if r['mesh'] == '2x16x16' else 'single'}")
+        p = os.path.join(hlo_dir, tag + ".hlo.zst")
+        if not os.path.exists(p):
+            continue
+        txt = zstandard.ZstdDecompressor().decompress(
+            open(p, "rb").read()).decode()
+        res = hlo_analysis.analyze_hlo_text(txt)
+        roof = hlo_analysis.Roofline(res["flops"], res["hbm_bytes"],
+                                     res["collective_bytes"])
+        r["roofline"] = roof.as_dict()
+        r["collectives"] = res["collectives"]
+        r["collective_counts"] = res["collective_counts"]
+        n += 1
+    json.dump(recs, open(json_path, "w"), indent=1)
+    print(f"re-analyzed {n} cells -> {json_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="results/hlo")
+    ap.add_argument("--json", default="results/dryrun.json")
+    a = ap.parse_args()
+    reanalyze(a.hlo, a.json)

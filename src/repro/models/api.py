@@ -1,0 +1,376 @@
+"""Public model API: spec/init, train_step, prefill, serve_step (decode).
+
+Entry points lowered by the dry-run, one per shape kind:
+  * train   — ``make_train_step``: fwd + chunked-xent + bwd + AdamW.
+  * prefill — ``prefill``: build the KV/recurrent cache, return last logits.
+  * decode  — ``serve_step``: one new token against a seq_len cache.
+
+Cache layouts (stacked over layers so every step is a scan):
+  attn:    k,v [L,B,Sa,Hkv,Dh] bf16; pos_map [B,Sa] int32 (-1 = empty)
+  zamba2:  conv [G,P,B,W-1,Ch], ssm [G,P,B,nh,hd,N] fp32, shared-attn KV [G,...]
+  xlstm:   per-block (conv, C, n, m) for mLSTM; (c, n, m, h) for sLSTM
+  whisper: self-KV [L,...] + static cross-KV [L,B,Se,Hkv,Dh]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.models.attention import decode_attention, flash_attention
+from repro.nn.layers import apply_rope
+from repro.nn.spec import abstract_params, init_params
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Tree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    @functools.cached_property
+    def spec(self):
+        return lm.build_spec(self.cfg)
+
+    # ------------------------------------------------------------- params
+    def init(self, key, param_dtype=jnp.bfloat16):
+        return init_params(self.spec, key, param_dtype)
+
+    def abstract(self, param_dtype=jnp.bfloat16):
+        return abstract_params(self.spec, param_dtype)
+
+    # ------------------------------------------------------------- train
+    def train_loss(self, params, batch, *, remat=True):
+        return lm.train_loss(self.cfg, params, batch, remat=remat)
+
+    def make_train_step(self, opt_cfg: AdamWConfig | None = None):
+        cfg = self.cfg
+        opt_cfg = opt_cfg or AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.train_loss(cfg, p, batch))(params)
+            params, opt_state, metrics = adamw_update(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        return train_step
+
+    def init_opt(self, params):
+        return adamw_init(params)
+
+    # ------------------------------------------------------------- inputs
+    def input_specs(self, shape: ShapeConfig, *, mode: str | None = None):
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        mode = mode or shape.kind
+        if mode == "train":
+            out = {"tokens": _sds((B, S), jnp.int32),
+                   "labels": _sds((B, S), jnp.int32)}
+            if cfg.cross_attention:
+                out["encoder_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                             jnp.bfloat16)
+            return out
+        if mode == "prefill":
+            out = {"tokens": _sds((B, S), jnp.int32)}
+            if cfg.cross_attention:
+                out["encoder_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                             jnp.bfloat16)
+            return out
+        # decode: one token + cache
+        return {"tokens": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32)}
+
+    # ------------------------------------------------------------- caches
+    def abstract_cache(self, B: int, Sa: int):
+        cfg = self.cfg
+        Hkv, Dh, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+        if cfg.block_kind == "mamba_hybrid":
+            G = L // cfg.shared_attn_every
+            P = cfg.shared_attn_every
+            Ch = cfg.d_inner + 2 * cfg.ssm_state
+            nh = cfg.d_inner // cfg.ssm_headdim
+            return {
+                "conv": _sds((G, P, B, cfg.conv_width - 1, Ch), jnp.bfloat16),
+                "ssm": _sds((G, P, B, nh, cfg.ssm_headdim, cfg.ssm_state),
+                            jnp.float32),
+                "k": _sds((G, B, Sa, Hkv, Dh), jnp.bfloat16),
+                "v": _sds((G, B, Sa, Hkv, Dh), jnp.bfloat16),
+                "pos_map": _sds((B, Sa), jnp.int32),
+            }
+        if cfg.block_kind == "xlstm":
+            P = cfg.mlstm_per_slstm
+            G = L // (P + 1)
+            d_in = int(cfg.proj_factor * cfg.d_model)
+            dh = d_in // cfg.n_heads
+            d = cfg.d_model
+            return {
+                "mconv": _sds((G, P, B, cfg.conv_width - 1, d_in), jnp.bfloat16),
+                "mC": _sds((G, P, B, cfg.n_heads, dh, dh), jnp.float32),
+                "mn": _sds((G, P, B, cfg.n_heads, dh), jnp.float32),
+                "mm": _sds((G, P, B, cfg.n_heads), jnp.float32),
+                "sc": _sds((G, B, d), jnp.float32),
+                "sn": _sds((G, B, d), jnp.float32),
+                "sm": _sds((G, B, d), jnp.float32),
+                "sh": _sds((G, B, d), jnp.float32),
+            }
+        out = {"k": _sds((L, B, Sa, Hkv, Dh), jnp.bfloat16),
+               "v": _sds((L, B, Sa, Hkv, Dh), jnp.bfloat16),
+               "pos_map": _sds((B, Sa), jnp.int32)}
+        if cfg.cross_attention:
+            out["xk"] = _sds((L, B, cfg.encoder_seq, Hkv, Dh), jnp.bfloat16)
+            out["xv"] = _sds((L, B, cfg.encoder_seq, Hkv, Dh), jnp.bfloat16)
+        return out
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, params, batch):
+        """Returns (last-token logits [B,V], cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if cfg.cross_attention:
+            enc = lm.whisper_encode(cfg, params, batch["encoder_frames"])
+            h, kvs = lm.whisper_decode_forward(cfg, params, tokens, enc,
+                                               return_cache=True)
+            k, v, xk, xv = kvs
+            cache = {"k": k, "v": v, "xk": xk, "xv": xv,
+                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
+        elif cfg.block_kind == "mamba_hybrid":
+            h, caches = lm.zamba2_forward(cfg, params, tokens,
+                                          return_cache=True)
+            (conv, ssm), (k, v) = caches
+            cache = {"conv": conv, "ssm": ssm, "k": k, "v": v,
+                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
+        elif cfg.block_kind == "xlstm":
+            h, caches = lm.xlstm_forward(cfg, params, tokens,
+                                         return_cache=True)
+            (mconv, (mC, mn, mm)), (sc, sn, sm, sh) = caches
+            cache = {"mconv": mconv, "mC": mC, "mn": mn, "mm": mm,
+                     "sc": sc, "sn": sn, "sm": sm, "sh": sh}
+        else:
+            h, (k, v) = lm.attn_forward(cfg, params, tokens,
+                                        return_cache=True)
+            cache = {"k": k, "v": v,
+                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
+        logits = lm.last_logits(cfg, params, h[:, -1])
+        return logits, cache
+
+    # ------------------------------------------------------------- decode
+    def serve_step(self, params, cache, batch):
+        """One token for the whole batch. batch = {tokens [B], pos [B]}."""
+        cfg = self.cfg
+        tokens, pos = batch["tokens"], batch["pos"]
+        B = tokens.shape[0]
+        dt = jnp.dtype(cfg.act_dtype)
+        x = params["embed"]["table"].astype(dt)[tokens]  # [B, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+        if cfg.block_kind == "mamba_hybrid":
+            return self._zamba2_decode(params, cache, x, pos)
+        if cfg.block_kind == "xlstm":
+            return self._xlstm_decode(params, cache, x, pos)
+        if cfg.cross_attention:
+            return self._whisper_decode(params, cache, x, pos)
+        return self._attn_decode(params, cache, x, pos)
+
+    def _decode_layer(self, pl, x, kc, vc, pos_map, pos, rope, window):
+        """One attn-family decode layer; window is python-static."""
+        cfg = self.cfg
+        B = x.shape[0]
+        cos, sin = rope
+        xn = lm._norm(pl, x[:, None], cfg.norm, "ln1")
+        q, k, v = lm._qkv(pl["attn"], cfg, xn, B, 1)
+        q = apply_rope(q, cos, sin, pos[:, None])
+        k = apply_rope(k, cos, sin, pos[:, None])
+        kc = kc.at[jnp.arange(B), pos].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[jnp.arange(B), pos].set(v[:, 0].astype(vc.dtype))
+        o = decode_attention(q[:, 0], kc, vc, pos_map, pos, window=window,
+                     repeat_kv=cfg.decode_repeat_kv)
+        o = o.reshape(B, -1) @ pl["attn"]["wo"].astype(x.dtype)
+        if cfg.post_norms:
+            o = lm._norm(pl, o, cfg.norm, "pn1")
+        y = x + o
+        yn = lm._norm(pl, y[:, None], cfg.norm, "ln2")
+        if cfg.n_experts:
+            f = lm.moe_lib.moe_apply(pl["moe"], yn[:, 0], top_k=cfg.top_k,
+                                     norm_topk=cfg.norm_topk,
+                                     capacity_factor=cfg.capacity_factor,
+                                     act=lm._act(cfg.act))
+        else:
+            f = lm._mlp(pl["mlp"], cfg, yn)[:, 0]
+        if cfg.post_norms:
+            f = lm._norm(pl, f, cfg.norm, "pn2")
+        return y + f, kc, vc
+
+    def _attn_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        B = x.shape[0]
+        Sa = cache["k"].shape[2]
+        rope_l, rope_g = lm._rope_tables(cfg, Sa)
+        pos_map = cache["pos_map"].at[jnp.arange(B), pos].set(pos)
+
+        if cfg.attn_pattern != "local_global":
+            def body(x, xs):
+                pl, kc, vc = xs
+                y, kc, vc = self._decode_layer(pl, x, kc, vc, pos_map, pos,
+                                               rope_g, 0)
+                return y, (kc, vc)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+        else:
+            grouped, tail, G, P_, n_tail = lm._regroup_layers(
+                cfg, params["layers"])
+            n_full = G * P_
+            kg = cache["k"][:n_full].reshape((G, P_) + cache["k"].shape[1:])
+            vg = cache["v"][:n_full].reshape((G, P_) + cache["v"].shape[1:])
+
+            def gbody(x, xs):
+                pg, kcs, vcs = xs
+                ks, vs = [], []
+                for idx in range(P_):
+                    pl = jax.tree.map(lambda a: a[idx], pg)
+                    is_g = idx == P_ - 1
+                    x, kc, vc = self._decode_layer(
+                        pl, x, kcs[idx], vcs[idx], pos_map, pos,
+                        rope_g if is_g else rope_l,
+                        0 if is_g else cfg.window)
+                    ks.append(kc)
+                    vs.append(vc)
+                return x, (jnp.stack(ks), jnp.stack(vs))
+
+            x, (kg_new, vg_new) = jax.lax.scan(gbody, x, (grouped, kg, vg))
+            tail_k, tail_v = [], []
+            for t in range(n_tail):
+                pl = jax.tree.map(lambda a: a[t], tail)
+                x, kc, vc = self._decode_layer(
+                    pl, x, cache["k"][n_full + t], cache["v"][n_full + t],
+                    pos_map, pos, rope_l, cfg.window)
+                tail_k.append(kc)
+                tail_v.append(vc)
+            k_new = jnp.concatenate(
+                [kg_new.reshape((n_full,) + kg_new.shape[2:])]
+                + [kk[None] for kk in tail_k], 0)
+            v_new = jnp.concatenate(
+                [vg_new.reshape((n_full,) + vg_new.shape[2:])]
+                + [vv[None] for vv in tail_v], 0)
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)
+        return logits, {"k": k_new, "v": v_new, "pos_map": pos_map}
+
+    def _zamba2_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        B = x.shape[0]
+        x0 = x
+        Sa = cache["k"].shape[2]
+        ropes = lm._rope_tables(cfg, Sa)
+        pos_map = cache["pos_map"].at[jnp.arange(B), pos].set(pos)
+
+        def group(x, xs):
+            pm, conv_g, ssm_g, kc, vc = xs
+
+            def inner(carry, xs_i):
+                xc = carry
+                pl, cs, ss = xs_i
+                y, cs, ss = m2.mamba2_decode(pl, xc, cs, ss,
+                                             n_state=cfg.ssm_state,
+                                             headdim=cfg.ssm_headdim)
+                return xc + y, (cs, ss)
+
+            x, (conv_g, ssm_g) = jax.lax.scan(inner, x, (pm, conv_g, ssm_g))
+            y, (kc, vc) = lm._shared_attn_apply(
+                cfg, params["shared_attn"], x, x0, ropes, None,
+                kv_cache=(kc, vc, pos_map), pos_scalar=pos)
+            return y, (conv_g, ssm_g, kc, vc)
+
+        x, (conv, ssm, k, v) = jax.lax.scan(
+            group, x, (params["mamba"], cache["conv"], cache["ssm"],
+                       cache["k"], cache["v"]))
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)
+        return logits, {"conv": conv, "ssm": ssm, "k": k, "v": v,
+                        "pos_map": pos_map}
+
+    def _xlstm_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def group(x, xs):
+            pm, psl, mconv, mC, mn, mm, sc, sn, sm, sh = xs
+
+            def inner(carry, xs_i):
+                xc = carry
+                pl, cs, C, n, m = xs_i
+                y, (cs, (C, n, m)) = xl.mlstm_block_decode(
+                    pl, xc, (cs, (C, n, m)), nh=cfg.n_heads)
+                return y, (cs, C, n, m)
+
+            x, (mconv, mC, mn, mm) = jax.lax.scan(
+                inner, x, (pm, mconv, mC, mn, mm))
+            x, (sc, sn, sm, sh) = xl.slstm_block_decode(
+                psl, x, (sc, sn, sm, sh), nh=cfg.n_heads)
+            return x, (mconv, mC, mn, mm, sc, sn, sm, sh)
+
+        x, ys = jax.lax.scan(
+            group, x, (params["mlstm"], params["slstm"], cache["mconv"],
+                       cache["mC"], cache["mn"], cache["mm"], cache["sc"],
+                       cache["sn"], cache["sm"], cache["sh"]))
+        mconv, mC, mn, mm, sc, sn, sm, sh = ys
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)
+        return logits, {"mconv": mconv, "mC": mC, "mn": mn, "mm": mm,
+                        "sc": sc, "sn": sn, "sm": sm, "sh": sh}
+
+    def _whisper_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        B = x.shape[0]
+        d = cfg.d_model
+        Sa = cache["k"].shape[2]
+        half = d // 2
+        freqs = jnp.exp(-jnp.arange(half) / (half - 1) * jnp.log(10000.0))
+        pe = jnp.concatenate([jnp.sin(pos[:, None] * freqs[None]),
+                              jnp.cos(pos[:, None] * freqs[None])], -1)
+        x = x + pe.astype(x.dtype)
+        pos_map = cache["pos_map"].at[jnp.arange(B), pos].set(pos)
+
+        def body(x, xs):
+            pl, kc, vc, xk, xv = xs
+            xn = lm._norm(pl, x[:, None], cfg.norm, "ln1")
+            q, k, v = lm._qkv(pl["attn"], cfg, xn, B, 1)
+            kc = kc.at[jnp.arange(B), pos].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[jnp.arange(B), pos].set(v[:, 0].astype(vc.dtype))
+            o = decode_attention(q[:, 0], kc, vc, pos_map, pos,
+                     repeat_kv=cfg.decode_repeat_kv)
+            x = x + o.reshape(B, -1) @ pl["attn"]["wo"].astype(x.dtype)
+            xn = lm._norm(pl, x[:, None], cfg.norm, "lnx")
+            q2, _, _ = lm._qkv(pl["xattn"], cfg, xn, B, 1)
+            xpos = jnp.broadcast_to(jnp.arange(xk.shape[1]), xk.shape[:2])
+            o2 = decode_attention(q2[:, 0], xk, xv, xpos,
+                                  jnp.full((B,), xk.shape[1], jnp.int32))
+            x = x + o2.reshape(B, -1) @ pl["xattn"]["wo"].astype(x.dtype)
+            xn = lm._norm(pl, x[:, None], cfg.norm, "ln2")
+            return x + lm._mlp(pl["mlp"], cfg, xn)[:, 0], (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)
+        return logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
+                        "xv": cache["xv"], "pos_map": pos_map}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,326 @@
+"""Attention primitives shared across the model zoo.
+
+``flash_attention`` is a pure-JAX blocked (streaming-softmax) attention. It is
+simultaneously (a) the memory-bounded lowering path used by the dry-run — no
+[S, S] score tensor ever materializes — and (b) the numerical oracle for the
+Pallas kernel in ``repro/kernels/flash_attention.py``.
+
+The causal path enumerates only the (q-chunk, k-chunk) pairs that can contain
+unmasked entries (lower triangle, further pruned by a static sliding window),
+so HLO FLOPs match the true causal/windowed work — fully-masked blocks are
+never computed, exactly like the TPU kernel.
+
+GQA is handled by repeating K/V to the full head count up front: it keeps the
+head dim shardable over the model axis without (Hkv, G) reshape tricks that
+GSPMD cannot propagate through.
+
+Layouts: q [B, Sq, H, D]; k, v [B, Sk, Hkv, D].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, H):
+    Hkv = k.shape[2]
+    if Hkv == H:
+        return k
+    return jnp.repeat(k, H // Hkv, axis=2)
+
+
+def _block_pairs(nq, nk, cq, ck, q_off, window):
+    """Static list of (q-chunk, k-chunk) pairs with any live entries."""
+    pairs = []
+    for i in range(nq):
+        qlo, qhi = q_off + i * cq, q_off + (i + 1) * cq - 1
+        for j in range(nk):
+            klo, khi = j * ck, (j + 1) * ck - 1
+            if klo > qhi:
+                continue  # fully in the future
+            if window and (qlo - khi) >= window:
+                continue  # fully outside the sliding window
+            pairs.append((i, j))
+    return pairs
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int | None = None, chunk_q: int = 1024,
+                    chunk_k: int = 1024, scale: float | None = None,
+                    softcap: float = 0.0):
+    """Blocked streaming-softmax attention (static shapes, static pruning)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    scale = scale if scale is not None else D ** -0.5
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    if q_offset is None:
+        q_offset = Sk - Sq if causal else 0
+
+    if not causal and not window:
+        return _kv_scan_attention(q, k, v, chunk_k=chunk_k, scale=scale,
+                                  softcap=softcap)
+    if softcap:  # rare; fall back to plain autodiff through the fwd scan
+        o, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset,
+                               min(chunk_q, Sq), min(chunk_k, Sk), scale,
+                               softcap)
+        return o
+    return _flash(q, k, v, causal, window, q_offset, min(chunk_q, Sq),
+                  min(chunk_k, Sk), scale)
+
+
+def _pair_arrays(nq, nk, cq, ck, q_off, window, Sk):
+    pairs = _block_pairs(nq, nk, cq, ck, q_off, window)
+    ii = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    jj = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+    return ii, jj
+
+
+def _live_mask(i, j, cq, ck, q_offset, window, Sk):
+    qpos = q_offset + i * cq + jnp.arange(cq)
+    kpos = j * ck + jnp.arange(ck)
+    live = kpos[None, :] <= qpos[:, None]
+    if window:
+        live &= (qpos[:, None] - kpos[None, :]) < window
+    live &= kpos[None, :] < Sk  # k padding
+    return live
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck, scale,
+                    softcap=0.0):
+    """Returns (o [B,Sq,H,D], lse [B,H,Sq']).  k/v already repeated."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    pq, pk = nq * cq - Sq, nk * ck - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qh = q.transpose(0, 2, 1, 3)  # [B,H,Sq',D]
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    ii, jj = _pair_arrays(nq, nk, cq, ck, q_offset, window, Sk)
+
+    def step(carry, idx):
+        m, l, o = carry
+        i, j = idx
+        q_blk = jax.lax.dynamic_slice_in_dim(qh, i * cq, cq, 2)
+        k_blk = jax.lax.dynamic_slice_in_dim(kh, j * ck, ck, 2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vh, j * ck, ck, 2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        live = _live_mask(i, j, cq, ck, q_offset, window, Sk)
+        s = jnp.where(live[None, None], s, NEG_INF)
+        m_i = jax.lax.dynamic_slice_in_dim(m, i * cq, cq, 2)
+        l_i = jax.lax.dynamic_slice_in_dim(l, i * cq, cq, 2)
+        o_i = jax.lax.dynamic_slice_in_dim(o, i * cq, cq, 2)
+        m_new = jnp.maximum(m_i, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_i - m_new)
+        l_i = l_i * corr + p.sum(-1, keepdims=True)
+        o_i = o_i * corr + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                      v_blk.astype(jnp.float32))
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * cq, 2)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_i, i * cq, 2)
+        o = jax.lax.dynamic_update_slice_in_dim(o, o_i, i * cq, 2)
+        return (m, l, o), None
+
+    m0 = jnp.full((B, H, nq * cq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, nq * cq, 1), jnp.float32)
+    o0 = jnp.zeros((B, H, nq * cq, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (ii, jj))
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]  # [B,H,Sq']
+    o = o / jnp.maximum(l, 1e-30)
+    o = o.transpose(0, 2, 1, 3)[:, :Sq]
+    return o.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, cq, ck, scale):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck, scale)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, cq, ck, scale):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck, scale)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, q_offset, cq, ck, scale, res, do):
+    """Standard flash backward: recompute p per block from saved lse."""
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    pq, pk = nq * cq - Sq, nk * ck - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    dop = jnp.pad(do, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else do
+    op = jnp.pad(o, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else o
+    qh = qp.transpose(0, 2, 1, 3)
+    kh = kp.transpose(0, 2, 1, 3)
+    vh = vp.transpose(0, 2, 1, 3)
+    doh = dop.transpose(0, 2, 1, 3).astype(jnp.float32)
+    oh = op.transpose(0, 2, 1, 3).astype(jnp.float32)
+    Dv = jnp.sum(doh * oh, -1, keepdims=True)  # [B,H,Sq',1]
+    ii, jj = _pair_arrays(nq, nk, cq, ck, q_offset, window, Sk)
+
+    def step(carry, idx):
+        dq, dk, dv = carry
+        i, j = idx
+        q_blk = jax.lax.dynamic_slice_in_dim(qh, i * cq, cq, 2)
+        k_blk = jax.lax.dynamic_slice_in_dim(kh, j * ck, ck, 2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vh, j * ck, ck, 2)
+        do_blk = jax.lax.dynamic_slice_in_dim(doh, i * cq, cq, 2)
+        D_blk = jax.lax.dynamic_slice_in_dim(Dv, i * cq, cq, 2)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lse, i * cq, cq, 2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        live = _live_mask(i, j, cq, ck, q_offset, window, Sk)
+        s = jnp.where(live[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse_blk[..., None])  # [B,H,cq,ck]
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, do_blk)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do_blk,
+                        v_blk.astype(jnp.float32))
+        ds = p * (dp - D_blk) * scale
+        dq_i = jnp.einsum("bhqk,bhkd->bhqd", ds, k_blk.astype(jnp.float32))
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q_blk.astype(jnp.float32))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * cq, cq, 2) + dq_i,
+            i * cq, 2)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * ck, ck, 2) + dk_j,
+            j * ck, 2)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * ck, ck, 2) + dv_j,
+            j * ck, 2)
+        return (dq, dk, dv), None
+
+    z = jnp.zeros((B, H, nq * cq, D), jnp.float32)
+    zk = jnp.zeros((B, H, nk * ck, D), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(step, (z, zk, zk), (ii, jj))
+    dq = dq.transpose(0, 2, 1, 3)[:, :Sq].astype(q.dtype)
+    dk = dk.transpose(0, 2, 1, 3)[:, :Sk].astype(k.dtype)
+    dv = dv.transpose(0, 2, 1, 3)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _kv_scan_attention(q, k, v, *, chunk_k, scale, softcap):
+    """Non-causal path: scan over KV chunks, all queries at once."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    ck = min(chunk_k, Sk)
+    nk = -(-Sk // ck)
+    pk = nk * ck - Sk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qh = q.transpose(0, 2, 1, 3)
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)  # [nk,B,H,ck,D]
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+    kmask = (jnp.arange(nk * ck) < Sk).reshape(nk, ck)
+
+    def step(carry, xs):
+        m, l, o = carry
+        k_blk, v_blk, live = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(live[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1, keepdims=True)
+        o = o * corr + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                  v_blk.astype(jnp.float32))
+        return (m_new, l, o), None
+
+    m0 = jnp.full((B, H, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    o0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (_, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, kmask))
+    o = o / jnp.maximum(l, 1e-30)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                     window: int = 0, scale: float | None = None,
+                     softcap: float = 0.0, repeat_kv: bool = False):
+    """Single-token attention against a KV cache.
+
+    q [B, H, D]; k_cache/v_cache [B, S, Hkv, D]; cache_positions [B, S]
+    absolute position per cache slot (-1 = empty); pos [B] query position.
+
+    Default path keeps the cache at Hkv heads and groups q as [B, Hkv, G, D]
+    (GQA einsum) — the ``repeat_kv=True`` variant materializes the G-times
+    inflated cache and is kept only as the §Perf before/after baseline: for
+    chameleon-34b decode_32k it round-trips 8x the cache bytes through HBM.
+    """
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    if repeat_kv:
+        kc = _repeat_kv(k_cache, H)
+        vc = _repeat_kv(v_cache, H)
+        s = jnp.einsum("bhd,bshd->bhs", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        qg = q.reshape(B, Hkv, G, D)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        s = s.reshape(B, H, S)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+    if window:
+        valid &= (pos[:, None] - cache_positions) < window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if repeat_kv:
+        o = jnp.einsum("bhs,bshd->bhd", p, vc.astype(jnp.float32))
+    else:
+        # keep the cache in bf16; fp32 accumulation via the MXU preferred
+        # type — an explicit astype would materialize an f32 cache copy
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype)
+                       .reshape(B, Hkv, G, S), v_cache,
+                       preferred_element_type=jnp.float32).reshape(B, H, D)
+    return o.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """O(S^2)-memory oracle (tests only — small shapes)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq) + (Sk - Sq if causal else 0)
+    kp = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kp[None, :] <= qp[:, None]
+    if window:
+        m &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) layer: chunked matmul scan — the TPU-native formulation.
+
+The GPU reference implementation relies on a fused Triton kernel with
+sequential elementwise recurrence; on TPU we use the SSD block decomposition
+(Dao & Gu 2024, "minimal SSD"): intra-chunk attention-like matmuls (MXU) +
+an inter-chunk state recurrence over ``seq/chunk`` steps only.  The chunk
+contraction is what ``repro/kernels/mamba2_scan.py`` tiles for VMEM.
+
+Shapes: x [B, S, d_in] with d_in = expand*d, heads nh = d_in/headdim,
+state N, one B/C group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec
+
+
+def mamba2_spec(n_layers: int, d: int, d_in: int, n_state: int, headdim: int,
+                conv_width: int):
+    nh = d_in // headdim
+    conv_ch = d_in + 2 * n_state  # x, B, C all pass through the causal conv
+    proj_out = 2 * d_in + 2 * n_state + nh  # z, x, B, C, dt
+    L = n_layers
+    return {
+        "pre_norm": TensorSpec((L, d), ("layers", "embed"), "ones"),
+        "in_proj": TensorSpec((L, d, proj_out), ("layers", "embed", "mlp"),
+                              "normal", scale=d ** -0.5),
+        "conv_w": TensorSpec((L, conv_width, conv_ch), ("layers", None, "mlp"),
+                             "normal", scale=conv_width ** -0.5),
+        "conv_b": TensorSpec((L, conv_ch), ("layers", "mlp"), "zeros"),
+        "a_log": TensorSpec((L, nh), ("layers", None), "ones"),
+        "dt_bias": TensorSpec((L, nh), ("layers", None), "zeros"),
+        "d_skip": TensorSpec((L, nh), ("layers", None), "ones"),
+        "norm": TensorSpec((L, d_in), ("layers", "mlp"), "ones"),
+        "out_proj": TensorSpec((L, d_in, d), ("layers", "mlp", "embed"),
+                               "normal", scale=d_in ** -0.5),
+    }
+
+
+def _segsum(a):
+    """log-decay matrix: out[..., i, j] = sum(a[..., j+1:i+1]), -inf for j>i."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_neg, B, C, *, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x [b,S,h,p]; dt [b,S,h] (>0, already softplus'ed); a_neg [h] (<0);
+    B, C [b,S,n].  Returns (y [b,S,h,p], final_state [b,h,p,n]).
+    """
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    a = dt * a_neg[None, None, :]  # [b,S,h] log-decay per step
+    xd = (x * dt[..., None]).astype(jnp.float32)  # discretized input
+
+    def r(t, shape):  # [b, S, ...] -> [nc, b, chunk, ...]
+        return t.reshape((b, nc, chunk) + shape).swapaxes(0, 1)
+
+    ac = r(a, (h,)).transpose(0, 1, 3, 2)  # [nc,b,h,Q]
+    xc, Bc, Cc = r(xd, (h, p)), r(B, (n,)), r(C, (n,))
+
+    def step(state, inp):
+        x_k, B_k, C_k, a_k = inp  # [b,Q,h,p] [b,Q,n] [b,Q,n] [b,h,Q]
+        a_cum = jnp.cumsum(a_k, -1)  # [b,h,Q]
+        # intra-chunk (diagonal block): attention-like matmuls on the MXU
+        Lmat = jnp.exp(_segsum(a_k))  # [b,h,Q,Q]
+        scores = jnp.einsum("bln,bsn->bls", C_k, B_k,
+                            preferred_element_type=jnp.float32)
+        y = jnp.einsum("bls,bhls,bshp->blhp", scores, Lmat, x_k)
+        # off-diagonal: contribution of the carried state
+        y += jnp.einsum("bln,bhpn,bhl->blhp", C_k, state, jnp.exp(a_cum))
+        # state update
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # [b,h,Q]
+        new_state = jnp.einsum("bsn,bhs,bshp->bhpn", B_k, decay_states, x_k)
+        state = state * jnp.exp(a_cum[..., -1])[..., None, None] + new_state
+        return state, y
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, (xc, Bc, Cc, ac))
+    y = ys.swapaxes(0, 1).reshape(b, S, h, p)
+    return y, final
+
+
+def ssd_reference(x, dt, a_neg, B, C, init_state=None):
+    """Sequential per-token oracle (tests only)."""
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        dec = jnp.exp(dt[:, t] * a_neg[None, :])  # [b,h]
+        upd = jnp.einsum("bhp,bn->bhpn", (x[:, t] * dt[:, t, :, None]).astype(
+            jnp.float32), B[:, t].astype(jnp.float32))
+        state = state * dec[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, 1), state
+
+
+def ssd_decode_step(state, x_t, dt_t, a_neg, B_t, C_t):
+    """One-token recurrence. state [b,h,p,n]; x_t [b,h,p]; dt_t [b,h];
+    B_t, C_t [b,n]."""
+    dec = jnp.exp(dt_t * a_neg[None, :])
+    upd = jnp.einsum("bhp,bn->bhpn", (x_t * dt_t[..., None]).astype(jnp.float32),
+                     B_t.astype(jnp.float32))
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return y, state
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x [B, S, Ch]; w [W, Ch]; returns [B, S, Ch]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    return out + b[None, None]
+
+
+def causal_conv_step(conv_state, x_t, w, b):
+    """conv_state [B, W-1, Ch] (previous inputs); x_t [B, Ch]."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], 1)  # [B, W, Ch]
+    y = jnp.einsum("bwc,wc->bc", window, w) + b[None]
+    return y, window[:, 1:]
+
+
+def mamba2_forward(p, x, *, n_state: int, headdim: int, chunk: int = 256,
+                   init=None):
+    """One mamba2 layer (p has no leading L dim). x [B, S, d] -> [B, S, d].
+
+    init: None or (conv_state [B, W-1, Ch], ssm_state [B,h,p,n]) for chunked
+    continuation.  Returns (y, (conv_state, ssm_state)).
+    """
+    Bsz, S, d = x.shape
+    d_in = p["out_proj"].shape[0]
+    nh = p["a_log"].shape[0]
+    xf = x.astype(jnp.float32)
+    xn = (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+          * p["pre_norm"].astype(jnp.float32)).astype(x.dtype)
+    proj = xn @ p["in_proj"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n_state, 2 * d_in + 2 * n_state], -1)
+    conv_in = jnp.concatenate([xi, Bc, Cc], -1)
+    W = p["conv_w"].shape[0]
+    if init is None:
+        conv_out = causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype))
+        conv_state = conv_in[:, -(W - 1):]
+    else:  # exact continuation from a carried conv window
+        padded = jnp.concatenate([init[0].astype(x.dtype), conv_in], 1)
+        conv_out = sum(
+            padded[:, i:i + S] * p["conv_w"].astype(x.dtype)[i][None, None]
+            for i in range(W)) + p["conv_b"].astype(x.dtype)[None, None]
+        conv_state = padded[:, -(W - 1):]
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bc, Cc = jnp.split(conv_out, [d_in, d_in + n_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32)[None, None])
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xi.reshape(Bsz, S, nh, headdim)
+    y, ssm_state = ssd_chunked(xh, dt, a_neg, Bc, Cc, chunk=min(chunk, S),
+                               init_state=None if init is None else init[1])
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, -1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+         ).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (conv_state, ssm_state)
+
+
+def mamba2_decode(p, x_t, conv_state, ssm_state, *, n_state: int,
+                  headdim: int):
+    """One-token step. x_t [B, d] -> (y [B, d], new states)."""
+    Bsz, d = x_t.shape
+    d_in = p["out_proj"].shape[0]
+    nh = p["a_log"].shape[0]
+    xf = x_t.astype(jnp.float32)
+    xn = (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+          * p["pre_norm"].astype(jnp.float32)).astype(x_t.dtype)
+    proj = xn @ p["in_proj"].astype(x_t.dtype)
+    z, xi, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n_state, 2 * d_in + 2 * n_state], -1)
+    conv_in = jnp.concatenate([xi, Bc, Cc], -1)
+    conv_out, conv_state = causal_conv_step(
+        conv_state, conv_in, p["conv_w"].astype(x_t.dtype),
+        p["conv_b"].astype(x_t.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bc, Cc = jnp.split(conv_out, [d_in, d_in + n_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32)[None])
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xi.reshape(Bsz, nh, headdim)
+    y, ssm_state = ssd_decode_step(ssm_state, xh, dt, a_neg, Bc, Cc)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, d_in).astype(x_t.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, -1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+         ).astype(x_t.dtype)
+    return y @ p["out_proj"].astype(x_t.dtype), conv_state, ssm_state

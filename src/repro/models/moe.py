@@ -1,0 +1,155 @@
+"""Mixture-of-Experts: sort-based (Megablocks-style) token dispatch.
+
+Dense one-hot dispatch einsums cost O(T * E * C * d) FLOPs — for 60-expert
+top-4 that is >2x the useful expert compute, so we use the sort/gather
+formulation instead: FLOPs are exactly the expert matmuls; dispatch is pure
+data movement (gather/scatter), which XLA shards with an all-to-all when
+experts live on the model axis.
+
+Static shapes throughout (capacity-factor drop policy), so it lowers under
+pjit for the dry-run.  The grouped [E, C, d] x [E, d, f] einsum is the
+contraction the Pallas grouped-matmul kernel (repro/kernels/moe_gmm.py)
+implements on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec
+
+
+def moe_spec(n_layers: int, d: int, n_experts: int, ff: int,
+             shared_ff: int = 0):
+    p = {
+        "router": TensorSpec((n_layers, d, n_experts), ("layers", "embed", None),
+                             "normal", scale=d ** -0.5),
+        "w_gate": TensorSpec((n_layers, n_experts, d, ff),
+                             ("layers", "experts", "embed", "mlp"), "normal",
+                             scale=d ** -0.5),
+        "w_up": TensorSpec((n_layers, n_experts, d, ff),
+                           ("layers", "experts", "embed", "mlp"), "normal",
+                           scale=d ** -0.5),
+        "w_down": TensorSpec((n_layers, n_experts, ff, d),
+                             ("layers", "experts", "mlp", "embed"), "normal",
+                             scale=ff ** -0.5),
+    }
+    if shared_ff:
+        p["shared_gate"] = TensorSpec((n_layers, d, shared_ff),
+                                      ("layers", "embed", "mlp"), "normal",
+                                      scale=d ** -0.5)
+        p["shared_up"] = TensorSpec((n_layers, d, shared_ff),
+                                    ("layers", "embed", "mlp"), "normal",
+                                    scale=d ** -0.5)
+        p["shared_down"] = TensorSpec((n_layers, shared_ff, d),
+                                      ("layers", "mlp", "embed"), "normal",
+                                      scale=shared_ff ** -0.5)
+        p["shared_router"] = TensorSpec((n_layers, d, 1),
+                                        ("layers", "embed", None), "normal",
+                                        scale=d ** -0.5)
+    return p
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float = 1.25, align: int = 8) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(align, -(-c // align) * align)
+
+
+def moe_apply(p, x, *, top_k: int, norm_topk: bool,
+              capacity_factor: float = 1.25, act=jax.nn.silu,
+              dispatch_axes=None):
+    """x [T, d] -> [T, d].  p holds one layer's weights (no leading L dim).
+
+    ``dispatch_axes``: mesh axes to pin the capacity dim of the [E, C, d]
+    dispatch/combine tensors to (C is aligned to 128 so it divides).  Without
+    the constraint GSPMD tends to all-reduce the whole dispatch buffer per
+    layer; with it the cross-shard token movement lowers to all-to-all /
+    all-gather of token rows (see EXPERIMENTS.md §Perf cell D).
+    """
+    T, d = x.shape
+    E = p["router"].shape[-1]
+    C = capacity(T, E, top_k, capacity_factor,
+                 align=128 if dispatch_axes else 8)
+
+    def pin(t, spec):
+        if dispatch_axes is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    cap_ax = tuple(dispatch_axes) if dispatch_axes else None
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # [T, k]
+    if norm_topk:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch, GATHER-ONLY formulation: scatters lower to
+    # huge materialized index tensors under SPMD, gathers do not.
+    flat_expert = expert_ids.reshape(-1)  # [T*k]
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)  # sorted-by-expert slots
+    se = flat_expert[order]
+    st = order // top_k  # token of each sorted slot
+
+    # contiguous run of each expert in the sorted order
+    first = jnp.searchsorted(se, jnp.arange(E), side="left")  # [E]
+    last = jnp.searchsorted(se, jnp.arange(E), side="right")
+    src = first[:, None] + jnp.arange(C)[None, :]  # [E, C] sorted-slot index
+    valid = jnp.arange(C)[None, :] < (last - first)[:, None]
+    tok = st[jnp.clip(src, 0, T * top_k - 1)]  # [E, C] token index (gather)
+    xe = jnp.where(valid[..., None], x[tok], 0)  # [E, C, d] (gather)
+    xe = pin(xe, (None, cap_ax, None))
+
+    # ---- grouped expert compute (the Pallas-kernel contraction on TPU)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", act(g) * u, p["w_down"].astype(x.dtype))
+    ye = pin(ye, (None, cap_ax, None))
+
+    # ---- combine: each (token, k) slot gathers its expert output
+    inv = jnp.argsort(order)  # flat slot -> position in sorted order
+    c_of = inv - first[flat_expert]  # rank within expert run
+    kept = c_of < C  # capacity drop
+    rows = flat_expert * C + jnp.clip(c_of, 0, C - 1)  # [T*k]
+    vals = ye.reshape(E * C, d)[rows]  # gather
+    vals = jnp.where(kept[:, None], vals, 0).reshape(T, top_k, d)
+    y = jnp.einsum("tkd,tk->td", vals.astype(jnp.float32),
+                   gate_vals * kept.reshape(T, top_k))
+
+    if "shared_gate" in p:
+        sgx = act(x @ p["shared_gate"].astype(x.dtype)) * (
+            x @ p["shared_up"].astype(x.dtype))
+        shared = sgx @ p["shared_down"].astype(x.dtype)
+        sg_gate = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ p["shared_router"].astype(jnp.float32))
+        y = y + shared.astype(jnp.float32) * sg_gate
+    return y.astype(x.dtype)
+
+
+def moe_reference(p, x, *, top_k: int, norm_topk: bool, act=jax.nn.silu):
+    """Dense all-experts oracle (tests only): no capacity drop."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    if norm_topk:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    E = p["router"].shape[-1]
+    weights = jnp.zeros(probs.shape, jnp.float32)
+    for j in range(top_k):
+        weights = weights.at[jnp.arange(x.shape[0]), expert_ids[:, j]].add(
+            gate_vals[:, j])
+    g = jnp.einsum("td,edf->tef", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("td,edf->tef", x, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("tef,efd->ted", act(g) * u, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("ted,te->td", ye.astype(jnp.float32), weights)
+    if "shared_gate" in p:
+        sgx = act(x @ p["shared_gate"].astype(x.dtype)) * (
+            x @ p["shared_up"].astype(x.dtype))
+        shared = sgx @ p["shared_down"].astype(x.dtype)
+        sg_gate = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ p["shared_router"].astype(jnp.float32))
+        y = y + shared.astype(jnp.float32) * sg_gate
+    return y.astype(x.dtype)

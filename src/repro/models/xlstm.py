@@ -1,0 +1,342 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent scan).
+
+The mLSTM chunkwise formulation mirrors the SSD trick: intra-chunk quadratic
+attention-like matmuls (MXU-shaped) + an inter-chunk state recurrence, with
+log-space max-stabilization carried through the scan (the TPU-idiomatic
+replacement for the fused CUDA recurrence in the paper's reference code).
+sLSTM is inherently sequential (recurrent connections through h_{t-1}) and is
+implemented as a lax.scan over time — only 1 in 8 blocks is sLSTM.
+
+Per-head dims: dk = dv = d_in / nh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- specs
+
+
+def mlstm_spec(n_stack: tuple, d: int, d_in: int, nh: int, conv_width: int):
+    """n_stack: leading stacking dims, e.g. (groups, per_group)."""
+    L = n_stack
+    ax = tuple(["layers"] + [None] * (len(L) - 1))
+    dh = d_in // nh
+
+    def t(shape, axes, init="normal", scale=None):
+        return TensorSpec(L + shape, ax + axes, init, scale)
+
+    return {
+        "norm": t((d,), ("embed",), "ones"),
+        "up_x": t((d, d_in), ("embed", "mlp"), scale=d ** -0.5),
+        "up_z": t((d, d_in), ("embed", "mlp"), scale=d ** -0.5),
+        "conv_w": t((conv_width, d_in), (None, "mlp"),
+                    scale=conv_width ** -0.5),
+        "conv_b": t((d_in,), ("mlp",), "zeros"),
+        "wq": t((d_in, d_in), ("mlp", "heads"), scale=d_in ** -0.5),
+        "wk": t((d_in, d_in), ("mlp", "heads"), scale=d_in ** -0.5),
+        "wv": t((d_in, d_in), ("mlp", "heads"), scale=d_in ** -0.5),
+        "w_i": t((d_in, nh), ("mlp", None), scale=d_in ** -0.5),
+        "w_f": t((d_in, nh), ("mlp", None), scale=d_in ** -0.5),
+        "b_i": t((nh,), (None,), "zeros"),
+        "b_f": t((nh,), (None,), "ones"),  # bias toward remembering
+        "out_norm": t((d_in,), ("mlp",), "ones"),
+        "down": t((d_in, d), ("mlp", "embed"), scale=d_in ** -0.5),
+    }
+
+
+def slstm_spec(n_stack: tuple, d: int, nh: int):
+    L = n_stack
+    ax = tuple(["layers"] + [None] * (len(L) - 1))
+    dh = d // nh
+
+    def t(shape, axes, init="normal", scale=None):
+        return TensorSpec(L + shape, ax + axes, init, scale)
+
+    return {
+        "norm": t((d,), ("embed",), "ones"),
+        "w": t((d, 4 * d), ("embed", "mlp"), scale=d ** -0.5),  # z,i,f,o
+        "r": t((nh, dh, 4 * dh), (None, "heads", "mlp"), scale=dh ** -0.5),
+        "b": t((4 * d,), ("mlp",), "zeros"),
+        "out_norm": t((d,), ("embed",), "ones"),
+        "up_gate": t((d, int(d * 4 / 3)), ("embed", "mlp"), scale=d ** -0.5),
+        "up": t((d, int(d * 4 / 3)), ("embed", "mlp"), scale=d ** -0.5),
+        "down": t((int(d * 4 / 3), d), ("mlp", "embed"),
+                  scale=(d * 4 / 3) ** -0.5),
+    }
+
+
+# --------------------------------------------------------------------- mLSTM
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mlstm_chunkwise(q, k, v, ilog, flog, *, chunk: int, init=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v [b,S,h,dk]; ilog,flog [b,S,h] (log input gate / log forget gate).
+    Returns (h [b,S,h,dv], (C [b,h,dk,dv], n [b,h,dk], m [b,h])).
+    State is stored max-stabilized: C_tilde = C_true * exp(-m).
+    """
+    b, S, h, dk = q.shape
+    dv = v.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S
+    scale = dk ** -0.5
+
+    def r(t, shape):
+        return t.reshape((b, nc, chunk) + shape).swapaxes(0, 1)
+
+    qc, kc, vc = r(q, (h, dk)), r(k, (h, dk)), r(v, (h, dv))
+    ic = r(ilog, (h,)).transpose(0, 1, 3, 2)  # [nc,b,h,Q]
+    fc = r(flog, (h,)).transpose(0, 1, 3, 2)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        C, n, m = carry  # [b,h,dk,dv], [b,h,dk], [b,h]
+        q_k, k_k, v_k, i_k, f_k = inp
+        bcum = jnp.cumsum(f_k, -1)  # [b,h,Q]
+        # log decay matrix D[t,j] = bcum[t] - bcum[j] + i[j], j<=t
+        Dlog = jnp.where(tri[None, None],
+                         bcum[..., :, None] - bcum[..., None, :] +
+                         i_k[..., None, :], NEG_INF)  # [b,h,Q,Q]
+        inter_log = bcum + m[..., None]  # [b,h,Q]
+        m_t = jnp.maximum(Dlog.max(-1), inter_log)  # [b,h,Q] stabilizer
+        W_mat = jnp.exp(Dlog - m_t[..., None])  # decay weights
+        S_mat = jnp.einsum("bqhd,bkhd->bhqk", q_k, k_k,
+                           preferred_element_type=jnp.float32) * scale * W_mat
+        inter_w = jnp.exp(inter_log - m_t)  # [b,h,Q]
+        num = jnp.einsum("bhqk,bkhd->bqhd", S_mat, v_k.astype(jnp.float32))
+        num += jnp.einsum("bqhd,bhde,bhq->bqhe", q_k.astype(jnp.float32),
+                          C, inter_w) * scale
+        # stabilized normalizer vector (decayed sum of k's)
+        n_t = jnp.einsum("bhqk,bkhd->bqhd", W_mat, k_k.astype(jnp.float32))
+        n_t += n[:, None] * inter_w.transpose(0, 2, 1)[..., None]
+        qn = jnp.einsum("bqhd,bqhd->bqh", q_k.astype(jnp.float32), n_t) * scale
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t.transpose(0, 2, 1)))
+        h_out = num / denom[..., None]
+        # ---- end-of-chunk state update
+        b_Q = bcum[..., -1:]  # [b,h,1]
+        w_in = jnp.exp(b_Q - bcum + i_k)  # [b,h,Q] decay of each pos to end
+        m_new = jnp.maximum(b_Q[..., 0] + m, (b_Q - bcum + i_k).max(-1))
+        carry_w = jnp.exp(b_Q[..., 0] + m - m_new)  # [b,h]
+        in_w = jnp.exp(b_Q - bcum + i_k - m_new[..., None])  # [b,h,Q]
+        C = C * carry_w[..., None, None] + jnp.einsum(
+            "bqhd,bqhe,bhq->bhde", k_k.astype(jnp.float32),
+            v_k.astype(jnp.float32), in_w)
+        n = n * carry_w[..., None] + jnp.einsum(
+            "bqhd,bhq->bhd", k_k.astype(jnp.float32), in_w)
+        return (C, n, m_new), h_out
+
+    if init is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        C0, n0, m0 = init
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h_out = hs.swapaxes(0, 1).reshape(b, S, h, dv)
+    return h_out.astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode_step(state, q_t, k_t, v_t, ilog_t, flog_t):
+    """One token. q/k/v [b,h,d]; gates [b,h]. state = (C, n, m) stabilized."""
+    C, n, m = state
+    dk = q_t.shape[-1]
+    scale = dk ** -0.5
+    m_new = jnp.maximum(flog_t + m, ilog_t)
+    fw = jnp.exp(flog_t + m - m_new)
+    iw = jnp.exp(ilog_t - m_new)
+    C = C * fw[..., None, None] + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+    n = n * fw[..., None] + iw[..., None] * k_t.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q_t.astype(jnp.float32), C) * scale
+    qn = jnp.einsum("bhd,bhd->bh", q_t.astype(jnp.float32), n) * scale
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = (num / denom[..., None]).astype(q_t.dtype)
+    return h, (C, n, m_new)
+
+
+def mlstm_reference(q, k, v, ilog, flog, init=None):
+    """Sequential oracle (tests only)."""
+    b, S, h, dk = q.shape
+    dv = v.shape[-1]
+    if init is None:
+        state = (jnp.zeros((b, h, dk, dv), jnp.float32),
+                 jnp.zeros((b, h, dk), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+    else:
+        state = init
+    outs = []
+    for t in range(S):
+        o, state = mlstm_decode_step(state, q[:, t], k[:, t], v[:, t],
+                                     ilog[:, t], flog[:, t])
+        outs.append(o)
+    return jnp.stack(outs, 1), state
+
+
+# --------------------------------------------------------------------- block
+# applies (params WITHOUT leading stack dims)
+
+from repro.models.mamba2 import causal_conv, causal_conv_step  # noqa: E402
+
+
+def mlstm_block(p, x, *, nh: int, chunk: int = 256, init=None,
+                gather_qkv: bool = False):
+    """x [B,S,d] -> (y, state). Pre-LN residual block.
+
+    ``gather_qkv``: constrain the conv output to be replicated before the
+    three d_in->d_in projections — one all-gather replaces three TP psums
+    (Megatron column-parallel trick; see EXPERIMENTS.md §Perf cell C).
+    """
+    B, S, d = x.shape
+    d_in = p["up_x"].shape[-1]
+    dh = d_in // nh
+    xn = _rms(x, p["norm"])
+    u = xn @ p["up_x"].astype(x.dtype)
+    z = xn @ p["up_z"].astype(x.dtype)
+    conv_init = None if init is None else init[0]
+    if init is None:
+        c = causal_conv(u, p["conv_w"].astype(x.dtype),
+                        p["conv_b"].astype(x.dtype))
+        conv_state = u[:, -(p["conv_w"].shape[0] - 1):]
+    else:
+        W = p["conv_w"].shape[0]
+        padded = jnp.concatenate([conv_init.astype(x.dtype), u], 1)
+        c = sum(padded[:, i:i + S] * p["conv_w"].astype(x.dtype)[i][None, None]
+                for i in range(W)) + p["conv_b"].astype(x.dtype)[None, None]
+        conv_state = padded[:, -(W - 1):]
+    c = jax.nn.silu(c)
+    if gather_qkv:
+        from jax.sharding import PartitionSpec as P
+        c = jax.lax.with_sharding_constraint(c, P())
+        u = jax.lax.with_sharding_constraint(u, P())
+    q = (c @ p["wq"].astype(x.dtype)).reshape(B, S, nh, dh)
+    k = (c @ p["wk"].astype(x.dtype)).reshape(B, S, nh, dh)
+    v = (u @ p["wv"].astype(x.dtype)).reshape(B, S, nh, dh)
+    ilog = (c.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+            + p["b_i"].astype(jnp.float32))
+    flog = jax.nn.log_sigmoid(
+        c.astype(jnp.float32) @ p["w_f"].astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32))
+    h, mstate = mlstm_chunkwise(q, k, v, ilog, flog, chunk=min(chunk, S),
+                                init=None if init is None else init[1])
+    h = h.reshape(B, S, d_in)
+    h = _rms(h, p["out_norm"]) * jax.nn.silu(z)
+    y = h @ p["down"].astype(x.dtype)
+    return x + y, (conv_state, mstate)
+
+
+def mlstm_block_decode(p, x_t, state, *, nh: int):
+    """x_t [B,d]."""
+    B, d = x_t.shape
+    d_in = p["up_x"].shape[-1]
+    dh = d_in // nh
+    conv_state, mstate = state
+    xn = _rms(x_t, p["norm"])
+    u = xn @ p["up_x"].astype(x_t.dtype)
+    z = xn @ p["up_z"].astype(x_t.dtype)
+    c, conv_state = causal_conv_step(conv_state, u,
+                                     p["conv_w"].astype(x_t.dtype),
+                                     p["conv_b"].astype(x_t.dtype))
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"].astype(x_t.dtype)).reshape(B, nh, dh)
+    k = (c @ p["wk"].astype(x_t.dtype)).reshape(B, nh, dh)
+    v = (u @ p["wv"].astype(x_t.dtype)).reshape(B, nh, dh)
+    ilog = (c.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+            + p["b_i"].astype(jnp.float32))
+    flog = jax.nn.log_sigmoid(
+        c.astype(jnp.float32) @ p["w_f"].astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32))
+    h, mstate = mlstm_decode_step(mstate, q, k, v, ilog, flog)
+    h = h.reshape(B, d_in)
+    h = _rms(h, p["out_norm"]) * jax.nn.silu(z)
+    return x_t + h @ p["down"].astype(x_t.dtype), (conv_state, mstate)
+
+
+# --------------------------------------------------------------------- sLSTM
+
+
+def slstm_cell_step(state, gates, nh: int):
+    """state = (c, n, m, h) each [B, d]; gates [B, 4d] pre-activation
+    (already includes W x + R h_prev + b)."""
+    c, n, m, h_prev = state
+    B, d4 = gates.shape
+    d = d4 // 4
+    zr, ir, fr, orr = jnp.split(gates.astype(jnp.float32), 4, -1)
+    z = jnp.tanh(zr)
+    o = jax.nn.sigmoid(orr)
+    flog = jax.nn.log_sigmoid(fr)
+    m_new = jnp.maximum(flog + m, ir)
+    fw = jnp.exp(flog + m - m_new)
+    iw = jnp.exp(ir - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, m_new, h)
+
+
+def slstm_scan(p, x, *, nh: int, init=None):
+    """Sequential sLSTM over time. x [B,S,d] -> (h [B,S,d], state)."""
+    B, S, d = x.shape
+    dh = d // nh
+    wx = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)  # [B,S,4d]
+
+    def step(state, wx_t):
+        c, n, m, h = state
+        # recurrent contribution: block-diagonal per head
+        hh = h.reshape(B, nh, dh).astype(jnp.float32)
+        rec = jnp.einsum("bhd,hde->bhe", hh,
+                         p["r"].astype(jnp.float32))  # [B,nh,4dh]
+        rec = rec.reshape(B, nh, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+        state = slstm_cell_step((c, n, m, h), wx_t.astype(jnp.float32) + rec,
+                                nh)
+        return state, state[3]
+
+    if init is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        init = (z, z, z, z)
+    state, hs = jax.lax.scan(step, init, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state
+
+
+def slstm_block(p, x, *, nh: int, init=None):
+    xn = _rms(x, p["norm"])
+    h, state = slstm_scan(p, xn, nh=nh, init=init)
+    h = _rms(h.astype(x.dtype), p["out_norm"])
+    y = x + h
+    # gated FFN (pf 4/3)
+    yn = _rms(y, p["norm"])
+    g = jax.nn.silu(yn @ p["up_gate"].astype(x.dtype)) * (
+        yn @ p["up"].astype(x.dtype))
+    return y + g @ p["down"].astype(x.dtype), state
+
+
+def slstm_block_decode(p, x_t, state, *, nh: int):
+    B, d = x_t.shape
+    dh = d // nh
+    xn = _rms(x_t, p["norm"])
+    wx = xn @ p["w"].astype(x_t.dtype) + p["b"].astype(x_t.dtype)
+    c, n, m, h = state
+    hh = h.reshape(B, nh, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(B, nh, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    state = slstm_cell_step((c, n, m, h), wx.astype(jnp.float32) + rec, nh)
+    hout = _rms(state[3].astype(x_t.dtype), p["out_norm"])
+    y = x_t + hout
+    yn = _rms(y, p["norm"])
+    g = jax.nn.silu(yn @ p["up_gate"].astype(x_t.dtype)) * (
+        yn @ p["up"].astype(x_t.dtype))
+    return y + g @ p["down"].astype(x_t.dtype), state

@@ -1,0 +1,10 @@
+from repro.nn.spec import (
+    TensorSpec,
+    abstract_params,
+    init_params,
+    param_bytes,
+    param_count,
+    pspec_tree,
+    tree_map_specs,
+)
+from repro.nn import layers  # noqa: F401

@@ -1,0 +1,119 @@
+"""Layer building blocks: spec constructors + pure apply functions.
+
+Conventions: activations flow in ``compute_dtype`` (bf16 on TPU), params are
+cast at use sites; norms accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import TensorSpec
+
+# ---------------------------------------------------------------- specs
+
+
+def linear(d_in: int, d_out: int, axes=("embed", "mlp"), bias: bool = False,
+           scale: float | None = None):
+    p = {"w": TensorSpec((d_in, d_out), axes, "normal", scale)}
+    if bias:
+        p["b"] = TensorSpec((d_out,), (axes[1],), "zeros")
+    return p
+
+
+def stacked_linear(n: int, d_in: int, d_out: int, axes=("embed", "mlp"),
+                   bias: bool = False, scale: float | None = None):
+    """Leading ``layers`` dim for scan-over-layers stacks."""
+    p = {"w": TensorSpec((n, d_in, d_out), ("layers",) + tuple(axes), "normal", scale)}
+    if bias:
+        p["b"] = TensorSpec((n, d_out), ("layers", axes[1]), "zeros")
+    return p
+
+
+def rmsnorm(dim: int, axes=("embed",)):
+    return {"scale": TensorSpec((dim,), axes, "ones")}
+
+
+def stacked_rmsnorm(n: int, dim: int, axes=("embed",)):
+    return {"scale": TensorSpec((n, dim), ("layers",) + tuple(axes), "ones")}
+
+
+def layernorm(dim: int, axes=("embed",)):
+    return {
+        "scale": TensorSpec((dim,), axes, "ones"),
+        "bias": TensorSpec((dim,), axes, "zeros"),
+    }
+
+
+def embedding(vocab: int, dim: int, axes=("vocab", "embed"), scale: float | None = None):
+    return {"table": TensorSpec((vocab, dim), axes, "embed", scale)}
+
+
+# ---------------------------------------------------------------- applies
+
+
+def apply_linear(p, x, compute_dtype=None):
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ p["w"].astype(dt)
+    if "b" in p:
+        y = y + p["b"].astype(dt)
+    return y
+
+
+def apply_rmsnorm(p, x, eps: float = 1e-6, zero_centered: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:  # gemma convention: weight stored as (scale - 1)
+        scale = scale + 1.0
+    return (xf * scale).astype(dt)
+
+
+def apply_layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def apply_embedding(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def dropout(key, x, rate: float, deterministic: bool):
+    if deterministic or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_frequencies(head_dim: int, max_len: int, theta: float = 10000.0,
+                     dtype=jnp.float32):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # [T, head_dim//2]
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def apply_rope(x, cos, sin, positions):
+    """x: [..., T, H, D]; positions: [..., T] int32."""
+    c = cos[positions][..., None, :]  # [..., T, 1, D/2]
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

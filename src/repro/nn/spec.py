@@ -1,0 +1,138 @@
+"""Parameter-spec substrate.
+
+Models are declared as nested dicts of :class:`TensorSpec`.  From one spec
+tree we derive, without ever materializing full-size weights:
+
+* ``init_params``     — seeded concrete arrays (smoke tests / real training)
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` stand-ins (multi-pod dry-run)
+* ``pspec_tree``      — ``PartitionSpec`` per leaf via logical-axis rules
+
+Logical axis names used across the repo:
+  embed, mlp, heads, kv_heads, qk, head_dim, vocab, layers, experts,
+  state, conv, seq, batch, None
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim; len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | scaled
+    scale: float | None = None  # stddev override (normal/scaled)
+    dtype: Any = None  # None -> use the policy's param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def tree_map_specs(fn: Callable[[str, TensorSpec], Any], tree: Tree, path: str = "") -> Tree:
+    """Map ``fn(path, spec)`` over every TensorSpec leaf, preserving structure."""
+    if _is_spec(tree):
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_specs(fn, v, f"{path}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [tree_map_specs(fn, v, f"{path}/{i}") for i, v in enumerate(tree)]
+        return type(tree)(out)
+    raise TypeError(f"unexpected node in spec tree at {path!r}: {type(tree)}")
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    digest = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, digest)
+
+
+def _materialize(spec: TensorSpec, key: jax.Array, dtype) -> jax.Array:
+    dtype = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init in ("normal", "embed", "scaled"):
+        if spec.scale is not None:
+            std = spec.scale
+        elif spec.init == "embed":
+            std = 1.0
+        else:  # fan-in scaling on the first axis by convention
+            fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+            std = fan_in ** -0.5
+        x = jax.random.normal(key, spec.shape, jnp.float32) * std
+        return x.astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(spec_tree: Tree, key: jax.Array, param_dtype=jnp.float32) -> Tree:
+    """Materialize real arrays; each leaf seeded deterministically by its path."""
+    return tree_map_specs(
+        lambda path, s: _materialize(s, _path_key(key, path), param_dtype), spec_tree
+    )
+
+
+def abstract_params(spec_tree: Tree, param_dtype=jnp.float32) -> Tree:
+    """ShapeDtypeStruct stand-ins — zero allocation, for .lower()/dry-run."""
+    return tree_map_specs(
+        lambda _p, s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype), spec_tree
+    )
+
+
+def pspec_tree(spec_tree: Tree, rules: dict) -> Tree:
+    """Map logical axes -> PartitionSpec using ``rules`` (logical -> mesh axis).
+
+    rules values may be: a mesh-axis name, a tuple of mesh-axis names, or None.
+    A mesh axis is used at most once per leaf (first logical dim wins).
+    """
+
+    def one(_path, spec: TensorSpec):
+        used: set = set()
+        out = []
+        for name in spec.axes:
+            mesh_axis = rules.get(name)
+            flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            if mesh_axis is None or any(a in used for a in flat):
+                out.append(None)
+            else:
+                used.update(flat)
+                out.append(mesh_axis)
+        return P(*out)
+
+    return tree_map_specs(one, spec_tree)
+
+
+def param_count(spec_tree: Tree) -> int:
+    total = 0
+
+    def add(_p, s):
+        nonlocal total
+        total += s.size
+        return None
+
+    tree_map_specs(add, spec_tree)
+    return total
+
+
+def param_bytes(spec_tree: Tree, dtype=jnp.bfloat16) -> int:
+    return param_count(spec_tree) * jnp.dtype(dtype).itemsize

@@ -1,0 +1,7 @@
+from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.router import (  # noqa: F401
+    HealthTracker,
+    QLMIORouter,
+    ServerHandle,
+    SimulatedServer,
+)

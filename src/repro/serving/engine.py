@@ -1,0 +1,139 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed decode batch of ``max_batch`` slots steps in lockstep (one
+``serve_step`` per tick).  Arriving requests are prefilled individually and
+spliced into a free slot's cache region; finished slots are freed
+immediately, so long requests never block short ones (continuous batching).
+
+Works for every arch family — per-leaf cache batch dims are keyed by the
+cache layout names in repro/models/api.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+# batch-dim index per cache leaf name (see Model.abstract_cache layouts)
+_BATCH_DIM = {"k": 1, "v": 1, "xk": 1, "xv": 1, "pos_map": 0,
+              "conv": 2, "ssm": 2, "mconv": 2, "mC": 2, "mn": 2, "mm": 2,
+              "sc": 1, "sn": 1, "sm": 1, "sh": 1}
+# leaves whose (L, B, S, ...) seq dim must be grown to max_seq on insert
+_SEQ_DIM = {"k": 2, "v": 2, "pos_map": 1}
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray  # prompt token ids
+    max_new_tokens: int = 32
+    extra: dict | None = None  # e.g. encoder_frames for whisper
+    # filled during serving:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_seq: int = 256, eos_id: int | None = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int64)  # next position per slot
+        self.budget = np.zeros(max_batch, np.int64)
+        self.cache = self._empty_cache()
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(model.serve_step)
+        self.ticks = 0
+        self.finished: list[Request] = []
+
+    # ----------------------------------------------------------- internals
+    def _empty_cache(self):
+        abstract = self.model.abstract_cache(self.max_batch, self.max_seq)
+        return {k: jnp.zeros(v.shape, v.dtype) if k != "pos_map"
+                else jnp.full(v.shape, -1, v.dtype)
+                for k, v in abstract.items()}
+
+    def _splice(self, slot: int, req_cache: dict, prompt_len: int):
+        """Insert a single-request prefill cache into batch slot ``slot``."""
+        new = {}
+        for name, leaf in self.cache.items():
+            rc = req_cache[name]
+            bdim = _BATCH_DIM[name]
+            if name in _SEQ_DIM:  # pad request cache S' -> max_seq
+                sdim = _SEQ_DIM[name]
+                pad = [(0, 0)] * rc.ndim
+                pad[sdim] = (0, leaf.shape[sdim] - rc.shape[sdim])
+                rc = jnp.pad(rc, pad, constant_values=(
+                    -1 if name == "pos_map" else 0))
+            idx = [slice(None)] * leaf.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            new[name] = leaf.at[tuple(idx)].set(rc.astype(leaf.dtype))
+        self.cache = new
+
+    # ------------------------------------------------------------- public
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.tokens, jnp.int32)[None]
+            batch = {"tokens": toks, **(req.extra or {})}
+            logits, rc = self._prefill(self.params, batch)
+            first = int(jnp.argmax(logits[0]))
+            self._splice(slot, rc, len(req.tokens))
+            req.output.append(first)
+            self.slots[slot] = req
+            self.pos[slot] = len(req.tokens)
+            self.budget[slot] = req.max_new_tokens - 1
+
+    def step(self) -> int:
+        """One engine tick: admit + one batched decode step.
+        Returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros(self.max_batch, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].output[-1]
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "pos": jnp.asarray(self.pos, jnp.int32)})
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        self.ticks += 1
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.pos[i] += 1
+            self.budget[i] -= 1
+            if (self.budget[i] <= 0 or tok == self.eos_id
+                    or self.pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None  # free the slot (continuous batching)
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+            if self.ticks > max_ticks:
+                raise RuntimeError("engine did not drain")
+        out, self.finished = self.finished, []
+        return out

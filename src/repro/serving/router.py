@@ -1,0 +1,173 @@
+"""Cluster-level QLMIO router with fault tolerance (DESIGN.md §6).
+
+The paper's offloading policy doubles as the serving fault-tolerance
+mechanism: a dead or straggling server's effective latency explodes, the
+health tracker folds that into the latency estimates the router sees, and
+traffic drains away.  On top of that:
+
+  * health tracking      — per-server EWMA latency + consecutive-failure
+                           count; a server past the failure threshold is
+                           excluded until its cooldown expires.
+  * hedged requests      — if a dispatched request exceeds
+                           ``hedge_factor x`` its predicted latency, a backup
+                           dispatch goes to the next-best healthy server and
+                           the first finisher wins (straggler mitigation).
+  * elastic scaling      — servers can be added/removed between decisions;
+                           the router re-reads the table every decision, and
+                           the QLMIO state encodes per-server features, so a
+                           trained policy generalizes across table sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServerHandle:
+    name: str
+    model_id: int
+    device_id: int
+    is_cloud: bool
+    # returns (latency_s, success) for a task dispatched now
+    execute: Callable[[int], "tuple[float, bool]"]
+
+
+class SimulatedServer(ServerHandle):
+    """Trace-driven handle over MIOBench (used by tests/examples)."""
+
+    def __init__(self, name, bench, class_idx, rng, fail: bool = False):
+        self.bench = bench
+        self.class_idx = class_idx
+        self.rng = rng
+        self.fail = fail
+        super().__init__(
+            name=name,
+            model_id=int(bench.model_id[class_idx]),
+            device_id=int(bench.device_id[class_idx]),
+            is_cloud=class_idx == bench.latency_s.shape[1] - 1,
+            execute=self._execute)
+
+    def _execute(self, task: int):
+        if self.fail:
+            return 240.0, False
+        return (float(self.bench.latency_s[task, self.class_idx]),
+                bool(self.bench.score[task, self.class_idx] == 1))
+
+
+class HealthTracker:
+    def __init__(self, n: int, *, ewma: float = 0.3, fail_threshold: int = 3,
+                 cooldown: float = 30.0):
+        self.ewma_lat = np.zeros(n)
+        self.fails = np.zeros(n, np.int64)
+        self.dead_until = np.zeros(n)
+        self.alpha = ewma
+        self.fail_threshold = fail_threshold
+        self.cooldown = cooldown
+
+    def record(self, server: int, latency: float, ok: bool, now: float):
+        self.ewma_lat[server] = ((1 - self.alpha) * self.ewma_lat[server]
+                                 + self.alpha * latency)
+        if ok:
+            self.fails[server] = 0
+        else:
+            self.fails[server] += 1
+            if self.fails[server] >= self.fail_threshold:
+                self.dead_until[server] = now + self.cooldown
+
+    def healthy(self, now: float) -> np.ndarray:
+        return now >= self.dead_until
+
+    def straggler_factor(self, server: int) -> float:
+        """>1 when a server is consistently slower than the fleet median."""
+        med = np.median(self.ewma_lat[self.ewma_lat > 0]) if \
+            (self.ewma_lat > 0).any() else 0.0
+        if med <= 0 or self.ewma_lat[server] <= 0:
+            return 1.0
+        return float(max(1.0, self.ewma_lat[server] / med))
+
+
+class QLMIORouter:
+    """Quality-latency tradeoff-aware dispatch over live server handles."""
+
+    def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
+                 *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
+                 policy=None):
+        """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
+        P(success).  ``policy`` optionally overrides the scoring rule with a
+        trained QLMIO agent's argmax."""
+        self.servers = servers
+        self.milp = milp_pred
+        self.mgqp = mgqp_pred
+        self.w = quality_weight
+        self.hedge_factor = hedge_factor
+        self.policy = policy
+        self.health = HealthTracker(len(servers))
+        self.queue_s = np.zeros(len(servers))
+        self.now = 0.0
+        self.log: list[dict] = []
+
+    # --------------------------------------------------------------- scoring
+    def _score(self, task: int) -> np.ndarray:
+        n = len(self.servers)
+        t_hat = np.array([self.milp(task, s) for s in range(n)])
+        b_hat = np.array([self.mgqp(task, s) for s in range(n)])
+        total = (t_hat + self.queue_s) * np.array(
+            [self.health.straggler_factor(s) for s in range(n)])
+        # reward-shaped utility: latency ratio + completion bonus (Eq. 21)
+        utility = -total / max(total.min(), 1e-6) + self.w * (
+            3.0 * b_hat - 2.0)
+        utility[~self.health.healthy(self.now)] = -np.inf
+        return utility
+
+    def route(self, task: int) -> int:
+        if self.policy is not None:
+            a = self.policy(task, self.queue_s, self.health)
+            if self.health.healthy(self.now)[a]:
+                return a
+        u = self._score(task)
+        return int(np.argmax(u))
+
+    # -------------------------------------------------------------- dispatch
+    def dispatch(self, task: int) -> dict:
+        s = self.route(task)
+        lat, ok = self.servers[s].execute(task)
+        predicted = self.milp(task, s) + self.queue_s[s]
+        hedged = False
+        if lat > self.hedge_factor * max(predicted, 0.25):
+            # straggler: hedge to the next-best healthy server
+            u = self._score(task)
+            u[s] = -np.inf
+            s2 = int(np.argmax(u))
+            lat2, ok2 = self.servers[s2].execute(task)
+            if self.queue_s[s2] + lat2 < self.queue_s[s] + lat:
+                self.health.record(s, lat, False, self.now)
+                s, lat, ok, hedged = s2, lat2, ok2, True
+        total = lat + self.queue_s[s]
+        self.queue_s[s] += lat
+        self.health.record(s, lat, ok, self.now)
+        self.now += 0.1
+        rec = {"task": task, "server": s, "latency": total, "ok": ok,
+               "hedged": hedged}
+        self.log.append(rec)
+        return rec
+
+    # --------------------------------------------------------------- elastic
+    def add_server(self, handle: ServerHandle):
+        self.servers.append(handle)
+        self.queue_s = np.append(self.queue_s, 0.0)
+        h = HealthTracker(len(self.servers))
+        h.ewma_lat[:-1] = self.health.ewma_lat
+        h.fails[:-1] = self.health.fails
+        h.dead_until[:-1] = self.health.dead_until
+        self.health = h
+
+    def remove_server(self, idx: int):
+        del self.servers[idx]
+        self.queue_s = np.delete(self.queue_s, idx)
+        for arr_name in ("ewma_lat", "fails", "dead_until"):
+            setattr(self.health, arr_name,
+                    np.delete(getattr(self.health, arr_name), idx))

@@ -1,0 +1,127 @@
+"""CEMLLM-Sim: trace-driven cloud-edge collaborative MLLM system simulator
+(paper Sec. V-B).
+
+Replays MIOBench: any offloading decision's ground-truth latency/quality is a
+table lookup, so policies train/evaluate without real hardware.  Supports the
+paper's 5/10/15-server configurations (Table III), per-server queues (Eq. 3),
+timeouts, episodes, and health/failure injection (serving-layer fault
+tolerance hooks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.cost_model import TIMEOUT_S
+from repro.sim.miobench import MIOBench, SERVER_CLASSES
+
+
+# paper Table III: (class_index, count) per configuration; class 2 = cloud
+SYSTEM_CONFIGS = {
+    5: [(2, 1), (1, 1), (0, 3)],
+    10: [(2, 1), (1, 2), (0, 7)],
+    15: [(2, 1), (1, 4), (0, 10)],
+}
+
+
+@dataclasses.dataclass
+class Servers:
+    """Static server table for one configuration."""
+    cls: np.ndarray  # [E+1] server-class index into SERVER_CLASSES
+    model_id: np.ndarray  # [E+1]
+    device_id: np.ndarray  # [E+1]
+    is_cloud: np.ndarray  # [E+1] bool
+
+    @property
+    def n(self) -> int:
+        return len(self.cls)
+
+
+def make_servers(n_servers: int, bench: MIOBench) -> Servers:
+    spec = SYSTEM_CONFIGS[n_servers]
+    cls = []
+    for class_idx, count in spec:
+        cls += [class_idx] * count
+    cls = np.array(cls)
+    return Servers(cls=cls,
+                   model_id=bench.model_id[cls],
+                   device_id=bench.device_id[cls],
+                   is_cloud=(cls == len(SERVER_CLASSES) - 1))
+
+
+class Episode:
+    """One decision episode: U users each propose a task; a policy assigns
+    each task to a server; queues accumulate (Eqs. 2-3)."""
+
+    def __init__(self, bench: MIOBench, servers: Servers, task_ids,
+                 rng: np.random.Generator, failed: np.ndarray | None = None):
+        self.bench = bench
+        self.servers = servers
+        self.task_ids = np.asarray(task_ids)
+        self.rng = rng
+        self.queue_s = np.zeros(servers.n)  # actual queued latency (Eq. 3)
+        self.queue_len = np.zeros(servers.n, np.int64)
+        self.t = 0
+        # failure injection: a failed server never completes tasks and its
+        # queue grows unboundedly (fault-tolerance experiments)
+        self.failed = (np.zeros(servers.n, bool) if failed is None else failed)
+
+    @property
+    def done(self) -> bool:
+        return self.t >= len(self.task_ids)
+
+    @property
+    def current_task(self) -> int:
+        return int(self.task_ids[self.t])
+
+    def ground_truth(self, task: int, server: int):
+        """(response_latency_s, success_bool) for this offloading decision."""
+        c = int(self.servers.cls[server])
+        lat = float(self.bench.latency_s[task, c])
+        sc = int(self.bench.score[task, c])
+        if self.failed[server]:
+            return TIMEOUT_S * 4, False
+        return lat, sc == 1
+
+    def step(self, server: int):
+        """Offload the current task; returns a record dict."""
+        task = self.current_task
+        lat_r, ok = self.ground_truth(task, server)
+        total = lat_r + self.queue_s[server]  # Eq. 2
+        timeout = total > TIMEOUT_S
+        success = ok and not timeout
+        self.queue_s[server] += lat_r
+        self.queue_len[server] += 1
+        self.t += 1
+        return {"task": task, "server": server, "latency_r": lat_r,
+                "latency_total": total, "success": success,
+                "timeout": timeout}
+
+
+def greedy_latencies(bench: MIOBench, servers: Servers, task_ids):
+    """The paper's Greedy comparator (Eq. 21): offload each task to the
+    server with the shortest queue; returns per-task total latency."""
+    q = np.zeros(servers.n)
+    out = np.zeros(len(task_ids))
+    for i, t in enumerate(task_ids):
+        s = int(np.argmin(q))
+        lat = bench.latency_s[int(t), servers.cls[s]]
+        out[i] = lat + q[s]
+        q[s] += lat
+    return out
+
+
+def run_policy(policy, bench: MIOBench, servers: Servers, task_ids,
+               rng: np.random.Generator, failed=None) -> dict:
+    """Roll a full episode with ``policy(episode) -> server``; aggregate the
+    paper's metrics."""
+    ep = Episode(bench, servers, task_ids, rng, failed=failed)
+    lat, succ = [], []
+    while not ep.done:
+        rec = ep.step(policy(ep))
+        lat.append(rec["latency_total"])
+        succ.append(rec["success"])
+    return {"avg_latency_s": float(np.mean(lat)),
+            "completion_rate": float(np.mean(succ)),
+            "p95_latency_s": float(np.percentile(lat, 95))}

@@ -1,0 +1,122 @@
+"""AdamW + schedules + clipping, pure-pytree (no optax on this box).
+
+Mixed precision: if params are stored in a low-precision dtype, the optimizer
+keeps an fp32 master copy in its state (ZeRO-1 shards it over the data axis
+via the pspec helpers in ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 copy when params are low precision, else None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - frac)
+    else:
+        decay = jnp.array(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw_init(params, keep_master: bool | None = None) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    m = jax.tree.map(f32, params)
+    v = jax.tree.map(f32, params)
+    low_precision = any(
+        l.dtype != jnp.float32 for l in jax.tree_util.tree_leaves(params)
+    )
+    keep_master = low_precision if keep_master is None else keep_master
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) if keep_master else None
+    return AdamWState(jnp.zeros((), jnp.int32), m, v, master)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = state.master if state.master is not None else params
+
+    def upd(p32, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        new = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p32)
+        return new, m, v
+
+    flat_ref, treedef = jax.tree_util.tree_flatten(ref)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p.astype(jnp.float32), g, m, v)
+           for p, g, m, v in zip(flat_ref, flat_g, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    if state.master is not None:
+        new_params = jax.tree.map(
+            lambda n, p: n.astype(p.dtype), new_master, params
+        )
+        new_state = AdamWState(step, new_m, new_v, new_master)
+    else:
+        new_params = new_master
+        new_state = AdamWState(step, new_m, new_v, None)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------------------------ SGD (for
+# the tiny DRL nets the paper trains with Adam defaults; kept for ablations)
+
+
+def sgd_update(params, grads, lr: float):
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# keep tests on 1 device (the dry-run subprocess sets its own XLA_FLAGS)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

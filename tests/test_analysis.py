@@ -1,0 +1,53 @@
+"""HLO analyzer (trip-count-aware) and FLOP-accounting units."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo_text
+from repro.models.counting import active_matmul_params, model_flops
+
+
+def test_analyzer_counts_scan_trip_counts():
+    def f(a, b):
+        def step(c, _):
+            return jnp.tanh(c @ b), None
+        c, _ = jax.lax.scan(step, a, None, length=10)
+        return c
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = jax.jit(f).lower(a, a).compile().as_text()
+    res = analyze_hlo_text(txt)
+    assert res["flops"] == pytest.approx(10 * 2 * 256 ** 3, rel=0.01)
+
+
+def test_analyzer_collectives_empty_on_single_device():
+    f = jax.jit(lambda a: a @ a)
+    txt = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)) \
+        .compile().as_text()
+    res = analyze_hlo_text(txt)
+    assert res["collective_bytes"] == 0
+    assert res["flops"] == pytest.approx(2 * 64 ** 3, rel=0.01)
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("qwen2-moe-a2.7b")
+    active = active_matmul_params(cfg)
+    # all-expert param count (approx): routed experts full
+    full = active + 3 * cfg.d_model * cfg.moe_ff * \
+        (cfg.n_experts - cfg.top_k) * cfg.n_layers
+    assert active < full
+    # a2.7b: ~2-4B active matmul params (incl. big-vocab head)
+    assert 1.5e9 < active < 5e9
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_model_flops_positive_and_ordered(arch_id):
+    cfg = get_config(arch_id)
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_train > 0 and f_prefill > 0 and f_decode > 0
+    assert f_decode < f_prefill  # 128 tokens vs 1M tokens
+    # train does fwd+bwd on 1M tokens vs prefill fwd on 1M tokens
+    assert f_train > f_prefill / 2

