@@ -57,6 +57,53 @@ def run():
     rows.append(("flash_decode", f"B{B}xS{S2}xH{H}", err, _roof(flops, byts),
                  time.time() - t0))
 
+    # paged flash decode: same contraction as flash_decode but K/V gathered
+    # through a block table over a page pool (repro/serving/kv_cache.py)
+    bs_pg = 64
+    NB = S2 // bs_pg
+    n_pages = 1 + NB  # null page + one sequence's pages
+    kp = jnp.asarray(rng.normal(size=(n_pages, bs_pg, Hkv, D)), jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(n_pages, bs_pg, Hkv, D)), jnp.bfloat16)
+    bt = jnp.arange(1, NB + 1, dtype=jnp.int32)[None]  # [1, NB]
+    t0 = time.time()
+    o = ops.paged_decode(q1, kp, vp, bt, pos)
+    err = float(jnp.max(jnp.abs(
+        o.astype(jnp.float32)
+        - ref.paged_decode_ref(q1, kp, vp, bt, pos).astype(jnp.float32))))
+    flops = 2 * 2 * B * H * S2 * D
+    byts = 2 * B * S2 * Hkv * D * 2  # K+V bf16: same bytes, no gather copy
+    paged_roof = _roof(flops, byts)
+    rows.append(("paged_decode", f"B{B}xS{S2}xH{H}xbs{bs_pg}", err,
+                 paged_roof, time.time() - t0))
+
+    # KV memory footprint + decode throughput: dense pads every slot to
+    # max_seq while the paged pool sizes to the workload's live tokens.
+    # Workload: 8 slots, lengths 0.5-8k, max_seq 8k, L=32 layers of the
+    # flash-decode shape above.
+    L, max_seq = 32, S2
+    lens = [512, 1024, 1536, 2048, 3072, 4096, 6144, 8192]
+    tok_bytes = Hkv * D * 2 * 2 * L  # K+V bf16, all layers
+    dense_bytes = len(lens) * max_seq * tok_bytes
+    paged_pages = sum(-(-n // bs_pg) for n in lens)
+    paged_bytes = (1 + paged_pages) * bs_pg * tok_bytes
+    dense_step_s = _roof(2 * 2 * H * D * sum(lens),
+                         sum(max_seq for _ in lens) * Hkv * D * 2 * 2)
+    paged_step_s = _roof(2 * 2 * H * D * sum(lens),
+                         sum(lens) * Hkv * D * 2 * 2)
+    print("paged_kv,metric,dense,paged,ratio")
+    print(f"paged_kv,kv_bytes_per_layer_stack,{dense_bytes},{paged_bytes},"
+          f"{dense_bytes / paged_bytes:.2f}")
+    print(f"paged_kv,decode_roofline_tok_s,{len(lens) / dense_step_s:.0f},"
+          f"{len(lens) / paged_step_s:.0f},"
+          f"{dense_step_s / paged_step_s:.2f}")
+    emit("paged_kv_memory", {
+        "workload_lens": lens, "max_seq": max_seq, "block_size": bs_pg,
+        "dense_kv_bytes": dense_bytes, "paged_kv_bytes": paged_bytes,
+        "memory_ratio": dense_bytes / paged_bytes,
+        "dense_decode_tok_s": len(lens) / dense_step_s,
+        "paged_decode_tok_s": len(lens) / paged_step_s,
+    })
+
     # SSD scan
     b2, S3, h2, p2, n2 = 1, 1024, 8, 64, 64
     x = jnp.asarray(rng.normal(size=(b2, S3, h2, p2)), jnp.float32)

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: install deps, run the tier-1 suite, then the decode
+# consistency smoke test.  Mirrors .github/workflows/ci.yml so the same
+# commands run locally: bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install --upgrade pip
+    python -m pip install "jax[cpu]" numpy pytest hypothesis msgpack zstandard
+fi
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python scripts/smoke_decode.py

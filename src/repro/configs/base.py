@@ -99,7 +99,7 @@ def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return False, (
             "pure full-attention arch: 500k context assumes sub-quadratic "
-            "attention/SSM (see DESIGN.md §5)"
+            "attention/SSM (see README.md, Design notes)"
         )
     return True, ""
 

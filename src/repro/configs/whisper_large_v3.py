@@ -1,7 +1,7 @@
 """whisper-large-v3 [audio] — encoder-decoder; conv/mel frontend is a STUB:
 input_specs() provides precomputed 1280-d frame embeddings (1500 frames).
 Assigned decoder seq lens are stress shapes beyond the 448-token production
-max (documented in DESIGN.md). [arXiv:2212.04356; unverified]"""
+max (documented in README.md, Design notes). [arXiv:2212.04356; unverified]"""
 from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(

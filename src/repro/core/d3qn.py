@@ -6,7 +6,7 @@ branches (text/image projections + per-server meta embeddings) fuse to a
 estimated queue loads (Eq. 19) and the MGQP success probabilities
 (3 x (E+1) scalars), through a 256-256 trunk into dueling value/advantage
 heads.  Q = V + A - mean(A)  (the paper's Eq. 22 prints "+ mean"; we follow
-the standard dueling estimator and the cited D3QN reference — DESIGN.md §7).
+the standard dueling estimator and the cited D3QN reference; see README.md).
 """
 from __future__ import annotations
 

@@ -5,7 +5,7 @@ Exact architectures of ``google/vit-base-patch16-224`` and
 pretrained weights are replaced by seeded random weights — frozen random
 transformers are valid (untrained-feature) encoders; the learnable
 projections / fusion / heads train on top exactly as in the paper.  This is
-documented as a fidelity deviation in DESIGN.md §4.
+documented as a fidelity deviation (README.md, Design notes).
 
 ``profile`` scales the encoder for CPU budget:
   * "paper" — ViT-B/16 @ 224px (196+1 tokens), DistilBERT L=256

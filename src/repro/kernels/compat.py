@@ -1,0 +1,12 @@
+"""Version compatibility for ``jax.experimental.pallas.tpu`` renames.
+
+jax >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x calls the same class
+``TPUCompilerParams``.  Import ``CompilerParams`` from here so every kernel
+works on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -1,0 +1,113 @@
+"""Pallas TPU paged flash-decode: one query token vs. a block-table KV cache.
+
+Unlike ``flash_decode`` (contiguous [B, S] cache), K/V live in a shared page
+pool ``[P, bs, Hkv, D]`` and each sequence addresses its pages through a
+block table ``[B, NB]`` (-1 = unallocated).  The table and the per-sequence
+positions ride in as *scalar prefetch* operands, so the BlockSpec index maps
+can dereference ``table[b, j]`` and DMA exactly the page each grid cell
+needs — the gathered [B, NB*bs] cache view of the XLA path never
+materializes in HBM.
+
+Grid is (B, Hkv, NB); like ``flash_decode`` the KV axis is sequential with
+running (m, l, acc) flash-softmax state in VMEM scratch, and all G = H/Hkv
+query heads of a kv head are processed together.  Unallocated blocks clamp
+to page 0 (the engine's reserved null page) and are masked out, so their
+DMA is wasted bandwidth but never wrong.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, scale, block_size, window):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bs, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[b]
+    page = bt_ref[b, j]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # logical position of page entry t is j*bs + t (2D iota: TPU-safe)
+    cpos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    valid = (page >= 0) & (cpos <= pos)
+    if window:
+        valid &= (pos - cpos) < window
+    s = jnp.where(valid, s, NEG_INF)  # [G, bs] via [1, bs] broadcast
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_tpu(q, k_pages, v_pages, block_tables, pos, *,
+                     window: int = 0, interpret: bool = False):
+    """q [B,H,D]; k_pages/v_pages [P,bs,Hkv,D]; block_tables [B,NB] int32
+    (-1 = unallocated); pos [B] int32 current positions."""
+    B, H, D = q.shape
+    P, bs, Hkv, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    G = H // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    kt = k_pages.transpose(2, 0, 1, 3)  # [Hkv, P, bs, D]
+    vt = v_pages.transpose(2, 0, 1, 3)
+    block_tables = block_tables.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+
+    def page_map(b, h, j, bt_ref, pos_ref):
+        return (h, jnp.maximum(bt_ref[b, j], 0), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, pos
+        grid=(B, Hkv, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), page_map),
+            pl.BlockSpec((1, 1, bs, D), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_size=bs, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, pos, qg, kt, vt)
+    return out.reshape(B, H, D)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import decode_attention as _decode_ref
+from repro.models.attention import paged_decode_attention as _paged_ref
 from repro.models.attention import reference_attention
 
 
@@ -15,6 +16,11 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0):
 def flash_decode_ref(q, k_cache, v_cache, cache_positions, pos, *, window=0):
     return _decode_ref(q, k_cache, v_cache, cache_positions, pos,
                        window=window)
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_tables, pos, *, window=0):
+    """Gather-through-block-table oracle (and the engine's CPU fallback)."""
+    return _paged_ref(q, k_pages, v_pages, block_tables, pos, window=window)
 
 
 def ssd_scan_ref(x, dt, a_neg, B, C):

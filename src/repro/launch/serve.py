@@ -86,6 +86,14 @@ def main():
                              minlength=len(servers))
     print(f"[serve] {ok}/{args.requests} ok in {time.time()-t0:.0f}s; "
           f"dispatch counts {per_server.tolist()}")
+    for s in servers:
+        st = s.engine.stats()
+        if st.get("paged"):
+            print(f"[serve] {s.name}: paged KV "
+                  f"{st['kv_cache_bytes'] / 1e6:.1f} MB, "
+                  f"prefix hits {st['prefix_hits']}, "
+                  f"reused {st['prefix_tokens_reused']} tok, "
+                  f"computed {st['prefill_tokens_computed']} tok")
     if args.fail_server is not None:
         assert per_server[args.fail_server] <= router.health.fail_threshold, \
             "router failed to drain traffic from the failed server"

@@ -7,6 +7,9 @@ Entry points lowered by the dry-run, one per shape kind:
 
 Cache layouts (stacked over layers so every step is a scan):
   attn:    k,v [L,B,Sa,Hkv,Dh] bf16; pos_map [B,Sa] int32 (-1 = empty)
+  paged:   k_pages,v_pages [L,P,bs,Hkv,Dh] bf16 + per-slot block tables
+           [B,NB] int32 (page id per bs-token logical block, -1 = empty);
+           see repro/serving/kv_cache.py for the pool/prefix-trie side
   zamba2:  conv [G,P,B,W-1,Ch], ssm [G,P,B,nh,hd,N] fp32, shared-attn KV [G,...]
   xlstm:   per-block (conv, C, n, m) for mLSTM; (c, n, m, h) for sLSTM
   whisper: self-KV [L,...] + static cross-KV [L,B,Se,Hkv,Dh]
@@ -24,7 +27,9 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import lm
 from repro.models import mamba2 as m2
 from repro.models import xlstm as xl
-from repro.models.attention import decode_attention, flash_attention
+from repro.kernels.paged_decode import paged_decode_tpu
+from repro.models.attention import (decode_attention, flash_attention,
+                                    paged_decode_attention)
 from repro.nn.layers import apply_rope
 from repro.nn.spec import abstract_params, init_params
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -134,6 +139,22 @@ class Model:
             out["xv"] = _sds((L, B, cfg.encoder_seq, Hkv, Dh), jnp.bfloat16)
         return out
 
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV serving covers the pure-attention family (full and
+        local:global); recurrent/hybrid/cross-attention caches are dense."""
+        return self.cfg.block_kind == "attn" and not self.cfg.cross_attention
+
+    def abstract_paged_cache(self, num_pages: int, block_size: int):
+        """Paged layout: K/V pages shared across the batch, addressed by a
+        per-slot block table instead of a dense [B, max_seq] region."""
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise ValueError(f"{cfg.name}: paged KV cache needs attn family")
+        shape = (cfg.n_layers, num_pages, block_size, cfg.n_kv_heads, cfg.hd)
+        return {"k_pages": _sds(shape, jnp.bfloat16),
+                "v_pages": _sds(shape, jnp.bfloat16)}
+
     # ------------------------------------------------------------- prefill
     def prefill(self, params, batch):
         """Returns (last-token logits [B,V], cache)."""
@@ -167,6 +188,24 @@ class Model:
         logits = lm.last_logits(cfg, params, h[:, -1])
         return logits, cache
 
+    def prefill_with_prefix(self, params, batch, prefix_k, prefix_v):
+        """Suffix prefill against cached prefix K/V (prefix-cache hit path).
+
+        ``batch["tokens"]`` [B, Ssfx] are the tokens *after* the cached
+        prefix; ``prefix_k``/``prefix_v`` [L, B, Spre, Hkv, Dh] hold the
+        prefix K/V (already rope'd, as stored by prefill).  Returns
+        (last-token logits [B, V], (k_sfx, v_sfx) [L, B, Ssfx, Hkv, Dh]) —
+        the prefix blocks are reused, only the suffix is computed.
+        """
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise ValueError(f"{cfg.name}: prefix prefill needs attn family")
+        h, (k, v) = lm.attn_forward(cfg, params, batch["tokens"],
+                                    return_cache=True,
+                                    prefix_kv=(prefix_k, prefix_v))
+        logits = lm.last_logits(cfg, params, h[:, -1])
+        return logits, (k, v)
+
     # ------------------------------------------------------------- decode
     def serve_step(self, params, cache, batch):
         """One token for the whole batch. batch = {tokens [B], pos [B]}."""
@@ -186,8 +225,13 @@ class Model:
             return self._whisper_decode(params, cache, x, pos)
         return self._attn_decode(params, cache, x, pos)
 
-    def _decode_layer(self, pl, x, kc, vc, pos_map, pos, rope, window):
-        """One attn-family decode layer; window is python-static."""
+    def _decode_layer(self, pl, x, kv, pos, rope, window, attend):
+        """One attn-family decode layer; window is python-static.
+
+        ``attend(q1, k1, v1, kv, window) -> (o, kv)`` owns the cache write
+        and the attention contraction — dense (slot-indexed [B, Sa] cache)
+        and paged (block-table page pool) serving share everything else.
+        """
         cfg = self.cfg
         B = x.shape[0]
         cos, sin = rope
@@ -195,10 +239,7 @@ class Model:
         q, k, v = lm._qkv(pl["attn"], cfg, xn, B, 1)
         q = apply_rope(q, cos, sin, pos[:, None])
         k = apply_rope(k, cos, sin, pos[:, None])
-        kc = kc.at[jnp.arange(B), pos].set(k[:, 0].astype(kc.dtype))
-        vc = vc.at[jnp.arange(B), pos].set(v[:, 0].astype(vc.dtype))
-        o = decode_attention(q[:, 0], kc, vc, pos_map, pos, window=window,
-                     repeat_kv=cfg.decode_repeat_kv)
+        o, kv = attend(q[:, 0], k[:, 0], v[:, 0], kv, window)
         o = o.reshape(B, -1) @ pl["attn"]["wo"].astype(x.dtype)
         if cfg.post_norms:
             o = lm._norm(pl, o, cfg.norm, "pn1")
@@ -213,63 +254,133 @@ class Model:
             f = lm._mlp(pl["mlp"], cfg, yn)[:, 0]
         if cfg.post_norms:
             f = lm._norm(pl, f, cfg.norm, "pn2")
-        return y + f, kc, vc
+        return y + f, kv
+
+    def _attn_decode_scan(self, params, x, pos, k_all, v_all, rope_len,
+                          attend):
+        """Layer-scan driver shared by the dense and paged decode paths.
+
+        ``k_all``/``v_all`` are per-layer cache leaves stacked on dim 0
+        ([L, B, Sa, ...] dense, [L, P, bs, ...] paged); returns
+        (hidden [B, d], k_new, v_new) with the same stacking.
+        """
+        cfg = self.cfg
+        rope_l, rope_g = lm._rope_tables(cfg, rope_len)
+
+        if cfg.attn_pattern != "local_global":
+            def body(x, xs):
+                pl, kc, vc = xs
+                y, (kc, vc) = self._decode_layer(pl, x, (kc, vc), pos,
+                                                 rope_g, 0, attend)
+                return y, (kc, vc)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], k_all, v_all))
+            return x, k_new, v_new
+
+        grouped, tail, G, P_, n_tail = lm._regroup_layers(
+            cfg, params["layers"])
+        n_full = G * P_
+        kg = k_all[:n_full].reshape((G, P_) + k_all.shape[1:])
+        vg = v_all[:n_full].reshape((G, P_) + v_all.shape[1:])
+
+        def gbody(x, xs):
+            pg, kcs, vcs = xs
+            ks, vs = [], []
+            for idx in range(P_):
+                pl = jax.tree.map(lambda a: a[idx], pg)
+                is_g = idx == P_ - 1
+                x, (kc, vc) = self._decode_layer(
+                    pl, x, (kcs[idx], vcs[idx]), pos,
+                    rope_g if is_g else rope_l,
+                    0 if is_g else cfg.window, attend)
+                ks.append(kc)
+                vs.append(vc)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (kg_new, vg_new) = jax.lax.scan(gbody, x, (grouped, kg, vg))
+        tail_k, tail_v = [], []
+        for t in range(n_tail):
+            pl = jax.tree.map(lambda a: a[t], tail)
+            x, (kc, vc) = self._decode_layer(
+                pl, x, (k_all[n_full + t], v_all[n_full + t]),
+                pos, rope_l, cfg.window, attend)
+            tail_k.append(kc)
+            tail_v.append(vc)
+        k_new = jnp.concatenate(
+            [kg_new.reshape((n_full,) + kg_new.shape[2:])]
+            + [kk[None] for kk in tail_k], 0)
+        v_new = jnp.concatenate(
+            [vg_new.reshape((n_full,) + vg_new.shape[2:])]
+            + [vv[None] for vv in tail_v], 0)
+        return x, k_new, v_new
 
     def _attn_decode(self, params, cache, x, pos):
         cfg = self.cfg
         B = x.shape[0]
         Sa = cache["k"].shape[2]
-        rope_l, rope_g = lm._rope_tables(cfg, Sa)
         pos_map = cache["pos_map"].at[jnp.arange(B), pos].set(pos)
 
-        if cfg.attn_pattern != "local_global":
-            def body(x, xs):
-                pl, kc, vc = xs
-                y, kc, vc = self._decode_layer(pl, x, kc, vc, pos_map, pos,
-                                               rope_g, 0)
-                return y, (kc, vc)
+        def attend(q1, k1, v1, kv, window):
+            kc, vc = kv
+            kc = kc.at[jnp.arange(B), pos].set(k1.astype(kc.dtype))
+            vc = vc.at[jnp.arange(B), pos].set(v1.astype(vc.dtype))
+            o = decode_attention(q1, kc, vc, pos_map, pos, window=window,
+                                 repeat_kv=cfg.decode_repeat_kv)
+            return o, (kc, vc)
 
-            x, (k_new, v_new) = jax.lax.scan(
-                body, x, (params["layers"], cache["k"], cache["v"]))
-        else:
-            grouped, tail, G, P_, n_tail = lm._regroup_layers(
-                cfg, params["layers"])
-            n_full = G * P_
-            kg = cache["k"][:n_full].reshape((G, P_) + cache["k"].shape[1:])
-            vg = cache["v"][:n_full].reshape((G, P_) + cache["v"].shape[1:])
-
-            def gbody(x, xs):
-                pg, kcs, vcs = xs
-                ks, vs = [], []
-                for idx in range(P_):
-                    pl = jax.tree.map(lambda a: a[idx], pg)
-                    is_g = idx == P_ - 1
-                    x, kc, vc = self._decode_layer(
-                        pl, x, kcs[idx], vcs[idx], pos_map, pos,
-                        rope_g if is_g else rope_l,
-                        0 if is_g else cfg.window)
-                    ks.append(kc)
-                    vs.append(vc)
-                return x, (jnp.stack(ks), jnp.stack(vs))
-
-            x, (kg_new, vg_new) = jax.lax.scan(gbody, x, (grouped, kg, vg))
-            tail_k, tail_v = [], []
-            for t in range(n_tail):
-                pl = jax.tree.map(lambda a: a[t], tail)
-                x, kc, vc = self._decode_layer(
-                    pl, x, cache["k"][n_full + t], cache["v"][n_full + t],
-                    pos_map, pos, rope_l, cfg.window)
-                tail_k.append(kc)
-                tail_v.append(vc)
-            k_new = jnp.concatenate(
-                [kg_new.reshape((n_full,) + kg_new.shape[2:])]
-                + [kk[None] for kk in tail_k], 0)
-            v_new = jnp.concatenate(
-                [vg_new.reshape((n_full,) + vg_new.shape[2:])]
-                + [vv[None] for vv in tail_v], 0)
+        x, k_new, v_new = self._attn_decode_scan(
+            params, x, pos, cache["k"], cache["v"], Sa, attend)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x)
         return logits, {"k": k_new, "v": v_new, "pos_map": pos_map}
+
+    def serve_step_paged(self, params, cache, batch):
+        """One token for the whole batch against the paged KV cache.
+
+        cache  = {k_pages, v_pages [L, P, bs, Hkv, Dh]}
+        batch  = {tokens [B], pos [B], block_tables [B, NB] int32}
+
+        Block table entry ``[b, j]`` is the physical page holding positions
+        ``[j*bs, (j+1)*bs)`` of slot b, -1 if unallocated.  The new K/V is
+        scattered into page ``tables[b, pos//bs]`` (clamped to the null
+        page 0 for inactive slots, whose rows are all -1).
+        """
+        cfg = self.cfg
+        tokens, pos = batch["tokens"], batch["pos"]
+        tables = batch["block_tables"]
+        B = tokens.shape[0]
+        bs = cache["k_pages"].shape[2]
+        NB = tables.shape[1]
+        dt = jnp.dtype(cfg.act_dtype)
+        x = params["embed"]["table"].astype(dt)[tokens]  # [B, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+        page = jnp.maximum(tables[jnp.arange(B), pos // bs], 0)
+        off = pos % bs
+        # Mosaic kernel on TPU (no gathered cache view in HBM); XLA gather
+        # path elsewhere — interpret-mode Pallas inside the serving jit
+        # would run the kernel body in Python per tick
+        use_kernel = jax.default_backend() == "tpu"
+
+        def attend(q1, k1, v1, kv, window):
+            kp, vp = kv
+            kp = kp.at[page, off].set(k1.astype(kp.dtype))
+            vp = vp.at[page, off].set(v1.astype(vp.dtype))
+            if use_kernel:
+                o = paged_decode_tpu(q1, kp, vp, tables, pos, window=window)
+            else:
+                o = paged_decode_attention(q1, kp, vp, tables, pos,
+                                           window=window)
+            return o, (kp, vp)
+
+        x, k_new, v_new = self._attn_decode_scan(
+            params, x, pos, cache["k_pages"], cache["v_pages"], NB * bs,
+            attend)
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)
+        return logits, {"k_pages": k_new, "v_pages": v_new}
 
     def _zamba2_decode(self, params, cache, x, pos):
         cfg = self.cfg

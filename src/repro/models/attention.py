@@ -302,6 +302,32 @@ def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
     return o.astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           window: int = 0, scale: float | None = None,
+                           softcap: float = 0.0):
+    """Single-token attention against a paged KV cache (one layer).
+
+    q [B, H, D]; k_pages/v_pages [P, bs, Hkv, D] — the physical page pool
+    for this layer; block_tables [B, NB] int32 page id per logical block
+    (-1 = unallocated); pos [B] query position.  Logical position of page
+    entry (j, t) is ``j*bs + t``; entries past ``pos`` or in unallocated
+    blocks are masked.  This is the XLA gather path — the Pallas kernel in
+    ``repro/kernels/paged_decode.py`` computes the same contraction without
+    materializing the gathered [B, NB*bs] cache view.
+    """
+    B = q.shape[0]
+    P, bs, Hkv, D = k_pages.shape
+    NB = block_tables.shape[1]
+    bt = jnp.maximum(block_tables, 0)  # clamp -1 -> null page, masked below
+    kc = k_pages[bt].reshape(B, NB * bs, Hkv, D)
+    vc = v_pages[bt].reshape(B, NB * bs, Hkv, D)
+    logical = (jnp.arange(NB)[:, None] * bs
+               + jnp.arange(bs)[None, :])  # [NB, bs]
+    cpos = jnp.where((block_tables >= 0)[:, :, None], logical[None], -1)
+    return decode_attention(q, kc, vc, cpos.reshape(B, NB * bs), pos,
+                            window=window, scale=scale, softcap=softcap)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
 def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
     """O(S^2)-memory oracle (tests only — small shapes)."""

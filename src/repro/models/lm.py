@@ -281,15 +281,26 @@ def _ffn(pl, cfg, x):
 # ---------------------------------------------------------------- attn family
 
 
-def _attn_layer_train(cfg, pl, x, rope, window, positions):
-    """One layer; ``window`` is python-static (0 = full causal)."""
+def _attn_layer_train(cfg, pl, x, rope, window, positions, pkv=None):
+    """One layer; ``window`` is python-static (0 = full causal).
+
+    ``pkv`` optionally carries this layer's already-rope'd prefix K/V
+    ``[B, Spre, Hkv, Dh]`` — the suffix queries then attend to
+    ``concat(prefix, suffix)`` with the causal diagonal shifted by Spre
+    (``flash_attention``'s default ``q_offset = Sk - Sq``).  Only the
+    suffix K/V is returned; the prefix is already cached by the caller.
+    """
     cos, sin = rope
     B, S, _ = x.shape
     xn = _norm(pl, x, cfg.norm, "ln1")
     q, k, v = _qkv(pl["attn"], cfg, xn, B, S)
     q = apply_rope(q, cos, sin, positions)
     k = apply_rope(k, cos, sin, positions)
-    o = flash_attention(q, k, v, causal=True, window=window)
+    ka, va = k, v
+    if pkv is not None:
+        ka = jnp.concatenate([pkv[0].astype(k.dtype), k], 1)
+        va = jnp.concatenate([pkv[1].astype(v.dtype), v], 1)
+    o = flash_attention(q, ka, va, causal=True, window=window)
     o = o.reshape(B, S, -1) @ pl["attn"]["wo"].astype(x.dtype)
     if cfg.post_norms:
         o = _norm(pl, o, cfg.norm, "pn1")
@@ -310,49 +321,73 @@ def _regroup_layers(cfg: ArchConfig, tree):
 
 
 def attn_forward(cfg: ArchConfig, params, tokens, *, remat=True,
-                 return_cache=False):
-    """tokens [B,S] -> final hidden [B,S,d] (+ optional stacked KV cache)."""
+                 return_cache=False, prefix_kv=None):
+    """tokens [B,S] -> final hidden [B,S,d] (+ optional stacked KV cache).
+
+    ``prefix_kv = (k, v)`` with shapes [L, B, Spre, Hkv, Dh] turns this
+    into a *suffix* prefill: the S tokens sit at absolute positions
+    [Spre, Spre+S) and attend to the cached prefix K/V without recomputing
+    it (the paged serving engine's prefix-cache hit path).  The returned
+    cache covers only the suffix.
+    """
     B, S = tokens.shape
     dt = jnp.dtype(cfg.act_dtype)
     x = params["embed"]["table"].astype(dt)[tokens]
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
-    positions = jnp.arange(S)
-    rope_l, rope_g = _rope_tables(cfg, S)
+    offset = 0 if prefix_kv is None else prefix_kv[0].shape[2]
+    positions = offset + jnp.arange(S)
+    rope_l, rope_g = _rope_tables(cfg, offset + S)
 
     if cfg.attn_pattern != "local_global":
-        def body(x, pl):
-            y, kv = _attn_layer_train(cfg, pl, x, rope_g, 0, positions)
+        def body(x, xs):
+            pl, pkv = (xs, None) if prefix_kv is None else (xs[0], xs[1:])
+            y, kv = _attn_layer_train(cfg, pl, x, rope_g, 0, positions,
+                                      pkv=pkv)
             return y, kv if return_cache else None
 
         f = jax.checkpoint(body) if remat else body
-        x, kvs = jax.lax.scan(f, x, params["layers"])
+        xs = params["layers"] if prefix_kv is None else \
+            (params["layers"],) + tuple(prefix_kv)
+        x, kvs = jax.lax.scan(f, x, xs)
         x = _norm(params, x, cfg.norm, "final")
         return (x, kvs) if return_cache else x
 
     # local:global pattern (gemma3): scan over period-sized groups with
     # python-static windows, so fully-masked attention blocks are pruned
     grouped, tail, G, P_, n_tail = _regroup_layers(cfg, params["layers"])
+    if prefix_kv is None:
+        pk_g = pv_g = pk_t = pv_t = None
+    else:
+        (pk_g, pk_t), (pv_g, pv_t) = [
+            (a[:G * P_].reshape((G, P_) + a.shape[1:]), a[G * P_:])
+            for a in prefix_kv]
 
-    def gbody(x, pg):
+    def gbody(x, xs):
+        pg = xs[0] if prefix_kv is not None else xs
         kvs = []
         for idx in range(P_):
             pl = jax.tree.map(lambda a: a[idx], pg)
+            pkv = None if prefix_kv is None else (xs[1][idx], xs[2][idx])
             is_g = idx == P_ - 1
             x, kv = _attn_layer_train(cfg, pl, x, rope_g if is_g else rope_l,
-                                      0 if is_g else cfg.window, positions)
+                                      0 if is_g else cfg.window, positions,
+                                      pkv=pkv)
             kvs.append(kv)
         if return_cache:
-            return x, jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+            return x, jax.tree.map(lambda *xs_: jnp.stack(xs_), *kvs)
         return x, None
 
     f = jax.checkpoint(gbody) if remat else gbody
-    x, kv_groups = jax.lax.scan(f, x, grouped)
+    gxs = grouped if prefix_kv is None else (grouped, pk_g, pv_g)
+    x, kv_groups = jax.lax.scan(f, x, gxs)
     tail_kvs = []
     for t in range(n_tail):
         pl = jax.tree.map(lambda a: a[t], tail)
+        pkv = None if prefix_kv is None else (pk_t[t], pv_t[t])
         step = functools.partial(_attn_layer_train, cfg, pl, rope=rope_l,
-                                 window=cfg.window, positions=positions)
+                                 window=cfg.window, positions=positions,
+                                 pkv=pkv)
         x, kv = (jax.checkpoint(lambda x_: step(x_))(x) if remat
                  else step(x))
         tail_kvs.append(kv)

@@ -1,9 +1,21 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching serving engine with a paged KV cache.
 
 A fixed decode batch of ``max_batch`` slots steps in lockstep (one
 ``serve_step`` per tick).  Arriving requests are prefilled individually and
-spliced into a free slot's cache region; finished slots are freed
-immediately, so long requests never block short ones (continuous batching).
+spliced into a free slot; finished slots are freed immediately, so long
+requests never block short ones (continuous batching).
+
+Two cache backends:
+
+  * **paged** (default for the pure-attention family) — K/V live in a
+    shared page pool (``repro/serving/kv_cache.py``); each slot holds a
+    block table instead of a dense ``max_seq`` region, prefill is never
+    padded, freed requests return their pages, and identical prompt
+    prefixes across requests are served from the prefix trie without
+    recomputation (suffix-only prefill + copy-on-write).
+  * **dense** — the original one-region-per-slot layout, still used for
+    recurrent/hybrid/cross-attention cache families (zamba2, xlstm,
+    whisper) whose state is not an append-only token sequence.
 
 Works for every arch family — per-leaf cache batch dims are keyed by the
 cache layout names in repro/models/api.py.
@@ -19,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serving.kv_cache import BlockPool, BlockTable, OutOfPagesError
 
 # batch-dim index per cache leaf name (see Model.abstract_cache layouts)
 _BATCH_DIM = {"k": 1, "v": 1, "xk": 1, "xv": 1, "pos_map": 0,
@@ -42,7 +55,9 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_seq: int = 256, eos_id: int | None = None,
-                 greedy: bool = True):
+                 greedy: bool = True, paged: bool | None = None,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefix_caching: bool = True):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -52,13 +67,37 @@ class ServingEngine:
         self.slots: list[Request | None] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int64)  # next position per slot
         self.budget = np.zeros(max_batch, np.int64)
-        self.cache = self._empty_cache()
+        self.paged = model.supports_paged if paged is None else paged
+        if self.paged and not model.supports_paged:
+            raise ValueError(
+                f"{model.cfg.name}: paged serving needs an attention-family "
+                "cache; use paged=False")
         self._prefill = jax.jit(model.prefill)
-        self._step = jax.jit(model.serve_step)
+        if self.paged:
+            self.page_size = page_size
+            self.max_blocks = -(-max_seq // page_size)
+            if num_pages is None:
+                # worst case (== dense capacity): admission/decode can
+                # never run out; size smaller to trade safety for memory
+                num_pages = 1 + max_batch * self.max_blocks
+            self.prefix_caching = prefix_caching
+            self.pool = BlockPool(num_pages, page_size)
+            abstract = model.abstract_paged_cache(num_pages, page_size)
+            self.cache = {name: jnp.zeros(s.shape, s.dtype)
+                          for name, s in abstract.items()}
+            self.tables = np.full((max_batch, self.max_blocks), -1, np.int32)
+            self.block_tables: list[BlockTable | None] = [None] * max_batch
+            self._step = jax.jit(model.serve_step_paged)
+            self._prefill_sfx = jax.jit(model.prefill_with_prefix)
+            self.prefill_tokens_computed = 0
+            self.prefix_tokens_reused = 0
+        else:
+            self.cache = self._empty_cache()
+            self._step = jax.jit(model.serve_step)
         self.ticks = 0
         self.finished: list[Request] = []
 
-    # ----------------------------------------------------------- internals
+    # ----------------------------------------------------- dense internals
     def _empty_cache(self):
         abstract = self.model.abstract_cache(self.max_batch, self.max_seq)
         return {k: jnp.zeros(v.shape, v.dtype) if k != "pos_map"
@@ -82,6 +121,119 @@ class ServingEngine:
             new[name] = leaf.at[tuple(idx)].set(rc.astype(leaf.dtype))
         self.cache = new
 
+    def _admit_dense(self, slot: int, req: Request) -> bool:
+        toks = jnp.asarray(req.tokens, jnp.int32)[None]
+        batch = {"tokens": toks, **(req.extra or {})}
+        logits, rc = self._prefill(self.params, batch)
+        first = int(jnp.argmax(logits[0]))
+        self._splice(slot, rc, len(req.tokens))
+        req.output.append(first)
+        return True
+
+    # ----------------------------------------------------- paged internals
+    def _cow_page(self, table: BlockTable, blk: int):
+        """Make ``table.pages[blk]`` privately writable, copying if shared."""
+        old = table.pages[blk]
+        new, copied = self.pool.ensure_writable(old)
+        if copied:
+            for name in ("k_pages", "v_pages"):
+                leaf = self.cache[name]
+                self.cache[name] = leaf.at[:, new].set(leaf[:, old])
+            self.pool.release(old)
+            table.pages[blk] = new
+
+    def _total_blocks(self, req: Request) -> int:
+        """Worst-case pages this request can ever hold (prompt + decode)."""
+        horizon = min(len(req.tokens) + req.max_new_tokens, self.max_seq)
+        return -(-horizon // self.page_size)
+
+    def _growth_outstanding(self) -> int:
+        """Pages active slots may still allocate as their decodes grow."""
+        return sum(self._total_blocks(r) - len(self.block_tables[i].pages)
+                   for i, r in enumerate(self.slots) if r is not None)
+
+    def _admit_paged(self, slot: int, req: Request) -> bool:
+        toks = np.asarray(req.tokens, np.int64)
+        T = len(toks)
+        bs = self.page_size
+        # admission control: admit only if the pool can cover this request's
+        # worst case on top of every active slot's remaining decode growth,
+        # so mid-stream page allocation can never fail.  Uses the
+        # side-effect-free peek so queued retries don't inflate hit stats
+        # or churn the LRU.  ``need`` counts every page this admission
+        # removes from the allocatable supply: fresh allocations, plus hit
+        # pages currently parked in the LRU (retaining those shrinks
+        # ``num_free`` even though they need no allocation), plus the
+        # copy-on-write page of a fully-cached prompt.
+        hit_pages = self.pool.peek_prefix(toks) if self.prefix_caching \
+            else []
+        n_hit_pages = len(hit_pages)
+        need = self._total_blocks(req) - n_hit_pages
+        need += sum(1 for p in hit_pages if self.pool.ref[p] == 0)
+        if n_hit_pages * bs >= T:
+            need += 1  # fully-cached prompt: copy-on-write of the last page
+        if self.pool.num_free() - self._growth_outstanding() < need:
+            self.queue.appendleft(req)
+            return False
+        table = BlockTable(self.pool)
+        n_reuse = 0
+        if self.prefix_caching:
+            table.pages, n_hit = self.pool.lookup_prefix(toks)
+            # a fully-cached prompt still needs its last token recomputed
+            # for the next-token logits -> copy-on-write on the final page
+            n_reuse = min(n_hit, T - 1)
+        try:
+            if n_reuse == 0:
+                if table.pages:
+                    table.free()
+                logits, rc = self._prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(toks, jnp.int32)[None],
+                     **(req.extra or {})})
+                sk, sv = rc["k"], rc["v"]  # [L, 1, T, Hkv, Dh]
+            else:
+                kp, vp = self.cache["k_pages"], self.cache["v_pages"]
+                pre = np.asarray(table.pages, np.int32)
+                L, _, _, Hkv, Dh = kp.shape
+                pk = kp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+                pv = vp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+                logits, (sk, sv) = self._prefill_sfx(
+                    self.params,
+                    {"tokens": jnp.asarray(toks[n_reuse:], jnp.int32)[None]},
+                    pk, pv)
+            first_blk = n_reuse // bs
+            if first_blk < len(table.pages):
+                self._cow_page(table, first_blk)
+            table.ensure_capacity(T)
+        except OutOfPagesError:
+            table.free()
+            self.queue.appendleft(req)  # retry once capacity frees up
+            return False
+        # scatter the computed suffix K/V into this request's pages
+        sfx_pos = np.arange(n_reuse, T)
+        pages = np.asarray([table.pages[p // bs] for p in sfx_pos], np.int32)
+        offs = (sfx_pos % bs).astype(np.int32)
+        for name, leaves in (("k_pages", sk), ("v_pages", sv)):
+            leaf = self.cache[name]
+            self.cache[name] = leaf.at[:, pages, offs].set(
+                leaves[:, 0].astype(leaf.dtype))
+        if self.prefix_caching:
+            self.pool.register_prefix(toks, table.pages[:T // bs])
+        self.prefill_tokens_computed += T - n_reuse
+        self.prefix_tokens_reused += n_reuse
+        req.output.append(int(jnp.argmax(logits[0])))
+        self.block_tables[slot] = table
+        self.tables[slot] = table.as_row(self.max_blocks)
+        return True
+
+    def _free_slot(self, slot: int):
+        self.slots[slot] = None
+        if self.paged:
+            self.block_tables[slot].free()
+            self.block_tables[slot] = None
+            self.tables[slot] = -1
+            self.pos[slot] = 0
+
     # ------------------------------------------------------------- public
     def submit(self, req: Request):
         self.queue.append(req)
@@ -91,12 +243,9 @@ class ServingEngine:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            toks = jnp.asarray(req.tokens, jnp.int32)[None]
-            batch = {"tokens": toks, **(req.extra or {})}
-            logits, rc = self._prefill(self.params, batch)
-            first = int(jnp.argmax(logits[0]))
-            self._splice(slot, rc, len(req.tokens))
-            req.output.append(first)
+            admit = self._admit_paged if self.paged else self._admit_dense
+            if not admit(slot, req):
+                break  # out of pages: wait for running requests to finish
             self.slots[slot] = req
             self.pos[slot] = len(req.tokens)
             self.budget[slot] = req.max_new_tokens - 1
@@ -111,10 +260,16 @@ class ServingEngine:
         tokens = np.zeros(self.max_batch, np.int32)
         for i in active:
             tokens[i] = self.slots[i].output[-1]
-        logits, self.cache = self._step(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(tokens),
-             "pos": jnp.asarray(self.pos, jnp.int32)})
+        batch = {"tokens": jnp.asarray(tokens),
+                 "pos": jnp.asarray(self.pos, jnp.int32)}
+        if self.paged:
+            for i in active:  # grow block tables across page boundaries
+                bt = self.block_tables[i]
+                if self.pos[i] >= bt.num_tokens_capacity():
+                    bt.ensure_capacity(self.pos[i] + 1)
+                    self.tables[i] = bt.as_row(self.max_blocks)
+            batch["block_tables"] = jnp.asarray(self.tables)
+        logits, self.cache = self._step(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits, -1))
         self.ticks += 1
         for i in active:
@@ -127,13 +282,34 @@ class ServingEngine:
                     or self.pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.finished.append(req)
-                self.slots[i] = None  # free the slot (continuous batching)
+                self._free_slot(i)  # free slot/pages (continuous batching)
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000):
         while self.queue or any(s is not None for s in self.slots):
-            self.step()
+            if self.step() == 0 and self.queue:
+                # nothing active yet admission failed: the head request can
+                # never fit (its worst case exceeds the whole pool)
+                head = self.queue[0]
+                raise OutOfPagesError(
+                    f"request {head.uid} needs {self._total_blocks(head)} "
+                    f"pages but the pool only has {self.pool.num_pages - 1}")
             if self.ticks > max_ticks:
                 raise RuntimeError("engine did not drain")
         out, self.finished = self.finished, []
+        return out
+
+    # -------------------------------------------------------------- stats
+    def kv_cache_bytes(self) -> int:
+        """Current KV-cache footprint (allocated device arrays)."""
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in self.cache.values())
+
+    def stats(self) -> dict:
+        out = {"ticks": self.ticks, "paged": self.paged,
+               "kv_cache_bytes": self.kv_cache_bytes()}
+        if self.paged:
+            out.update(self.pool.stats(),
+                       prefill_tokens_computed=self.prefill_tokens_computed,
+                       prefix_tokens_reused=self.prefix_tokens_reused)
         return out

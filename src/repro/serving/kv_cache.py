@@ -1,0 +1,236 @@
+"""Paged KV-cache bookkeeping: block pool, prefix trie, copy-on-write.
+
+The serving engine stores attention K/V in fixed-size *pages* (blocks of
+``block_size`` token slots shared by all layers) instead of one dense
+``[L, B, max_seq]`` region per slot.  This module is the pure-host side of
+that subsystem — numpy/python bookkeeping only, no device arrays — so its
+invariants are testable without touching jax:
+
+  * ``BlockPool``   — refcounted allocator over a fixed set of page ids.
+    Page 0 is reserved as the *null page*: inactive batch slots point at it
+    so batched scatter/gather in the decode step never aliases live data.
+  * prefix trie     — full prompt blocks are registered under a chained
+    hash ``h_j = H(h_{j-1}, tokens[j*bs:(j+1)*bs])``; a later request with
+    the same prompt prefix re-uses those pages (refcount++) and skips
+    recomputing their K/V.
+  * LRU eviction    — a registered page whose refcount drops to zero is
+    *not* freed: it parks in an LRU so future prefix hits still find it,
+    and is evicted (trie entry dropped, page recycled) only when the pool
+    runs dry.
+  * copy-on-write   — a request may need to write into a page it shares
+    with the trie or another request (e.g. recomputing the final prompt
+    token of a fully-cached prompt).  ``ensure_writable`` hands back a
+    private replacement page and tells the caller to copy the contents.
+
+Device-side layout (owned by the engine): ``k_pages``/``v_pages`` are
+``[L, num_pages, block_size, Hkv, Dh]`` and a per-slot block table maps
+logical block ``j`` (token positions ``[j*bs, (j+1)*bs)``) to a page id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class OutOfPagesError(RuntimeError):
+    """Raised when the pool is exhausted and nothing is evictable."""
+
+
+class BlockPool:
+    """Refcounted page allocator with prefix registry and LRU eviction."""
+
+    def __init__(self, num_pages: int, block_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_pages = num_pages
+        self.block_size = block_size
+        self.ref = np.zeros(num_pages, np.int64)
+        # page 0 reserved: never allocated, never written by live requests
+        self.free_list: deque[int] = deque(range(1, num_pages))
+        self.lru: "OrderedDict[int, bool]" = OrderedDict()  # evictable pages
+        self.page_hash: dict[int, int] = {}  # page -> chain hash
+        self.hash_page: dict[int, int] = {}  # chain hash -> page
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.cow_copies = 0
+
+    # ------------------------------------------------------------ allocation
+    def num_free(self) -> int:
+        """Pages allocatable right now (free + evictable)."""
+        return len(self.free_list) + len(self.lru)
+
+    def pages_in_use(self) -> int:
+        return int((self.ref > 0).sum())
+
+    def alloc(self) -> int:
+        """Grab a private page (ref=1), evicting a cached prefix if needed."""
+        if self.free_list:
+            page = self.free_list.popleft()
+        elif self.lru:
+            page, _ = self.lru.popitem(last=False)  # least recently used
+            self._drop_registration(page)
+            self.evictions += 1
+        else:
+            raise OutOfPagesError(
+                f"all {self.num_pages - 1} pages referenced by live requests")
+        assert self.ref[page] == 0
+        self.ref[page] = 1
+        return page
+
+    def retain(self, page: int):
+        """A new request starts sharing ``page``."""
+        if self.ref[page] == 0:
+            self.lru.pop(page, None)  # back in live use
+        self.ref[page] += 1
+
+    def release(self, page: int):
+        """Drop one reference; unregistered pages go back to the free list,
+        registered ones park in the LRU (data kept for future prefix hits)."""
+        if self.ref[page] <= 0:
+            raise ValueError(f"release of unreferenced page {page}")
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            if page in self.page_hash:
+                self.lru[page] = True
+                self.lru.move_to_end(page)
+            else:
+                self.free_list.append(page)
+
+    def ensure_writable(self, page: int) -> tuple[int, bool]:
+        """Copy-on-write gate for a page about to receive K/V writes.
+
+        Returns ``(page, False)`` when the caller holds the only reference
+        and the page is not a registered prefix, else allocates a private
+        replacement and returns ``(new_page, True)`` — the caller must copy
+        the device contents ``old -> new`` and then ``release(old)``.
+        """
+        if self.ref[page] == 1 and page not in self.page_hash:
+            return page, False
+        new = self.alloc()
+        self.cow_copies += 1
+        return new, True
+
+    # ---------------------------------------------------------- prefix trie
+    @staticmethod
+    def chain_hash(parent: int | None, block_tokens) -> int:
+        return hash((parent, bytes(np.asarray(block_tokens, np.int64).data)))
+
+    def peek_prefix(self, tokens) -> list[int]:
+        """Pages of the cached prefix, without side effects.
+
+        Unlike ``lookup_prefix`` this takes no references and records no
+        hit/miss stats — use it for admission-control checks that may be
+        retried many times before the real lookup.
+        """
+        tokens = np.asarray(tokens)
+        bs = self.block_size
+        h: int | None = None
+        pages: list[int] = []
+        for j in range(len(tokens) // bs):
+            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+            page = self.hash_page.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def lookup_prefix(self, tokens) -> tuple[list[int], int]:
+        """Longest cached block-aligned prefix of ``tokens``.
+
+        Returns ``(pages, n_tokens)``; every returned page has been
+        ``retain``-ed for the caller (caller owns one reference each).
+        """
+        tokens = np.asarray(tokens)
+        bs = self.block_size
+        pages: list[int] = []
+        h: int | None = None
+        for j in range(len(tokens) // bs):
+            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+            page = self.hash_page.get(h)
+            if page is None:
+                self.misses += 1
+                break
+            self.hits += 1
+            self.retain(page)
+            pages.append(page)
+        return pages, len(pages) * bs
+
+    def register_prefix(self, tokens, pages: list[int]):
+        """Publish the full prompt blocks of a request into the trie.
+
+        ``pages[j]`` holds K/V for ``tokens[j*bs:(j+1)*bs]``; only blocks
+        fully covered by prompt tokens may be passed (they are immutable for
+        the rest of the request's life, so sharing is safe).  Pages already
+        registered (prefix hits) are no-ops; a hash collision with a
+        different live page keeps the first registration.
+        """
+        tokens = np.asarray(tokens)
+        bs = self.block_size
+        h: int | None = None
+        for j, page in enumerate(pages):
+            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+            if h in self.hash_page:
+                continue  # already published (e.g. this request's own hit)
+            if page in self.page_hash:
+                continue  # page already published under another chain
+            self.hash_page[h] = page
+            self.page_hash[page] = h
+
+    def _drop_registration(self, page: int):
+        h = self.page_hash.pop(page, None)
+        if h is not None:
+            self.hash_page.pop(h, None)
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "num_pages": self.num_pages,
+            "block_size": self.block_size,
+            "pages_in_use": self.pages_in_use(),
+            "pages_cached": len(self.lru),
+            "prefix_hits": self.hits,
+            "prefix_misses": self.misses,
+            "evictions": self.evictions,
+            "cow_copies": self.cow_copies,
+        }
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """Logical-block -> page mapping for one request/slot."""
+
+    pool: BlockPool
+    pages: list[int] = dataclasses.field(default_factory=list)
+
+    def num_tokens_capacity(self) -> int:
+        return len(self.pages) * self.pool.block_size
+
+    def ensure_capacity(self, n_tokens: int):
+        """Allocate fresh pages until ``n_tokens`` positions are addressable."""
+        bs = self.pool.block_size
+        while len(self.pages) * bs < n_tokens:
+            self.pages.append(self.pool.alloc())
+
+    def page_of(self, position: int) -> int:
+        return self.pages[position // self.pool.block_size]
+
+    def slot_of(self, position: int) -> tuple[int, int]:
+        return self.page_of(position), position % self.pool.block_size
+
+    def as_row(self, max_blocks: int) -> np.ndarray:
+        row = np.full(max_blocks, -1, np.int32)
+        row[:len(self.pages)] = self.pages
+        return row
+
+    def free(self):
+        for page in self.pages:
+            self.pool.release(page)
+        self.pages = []

@@ -1,4 +1,4 @@
-"""Cluster-level QLMIO router with fault tolerance (DESIGN.md §6).
+"""Cluster-level QLMIO router with fault tolerance (README.md, Design notes).
 
 The paper's offloading policy doubles as the serving fault-tolerance
 mechanism: a dead or straggling server's effective latency explodes, the
@@ -16,6 +16,13 @@ traffic drains away.  On top of that:
                            the router re-reads the table every decision, and
                            the QLMIO state encodes per-server features, so a
                            trained policy generalizes across table sizes.
+  * prefix-cache affinity — servers running the paged KV engine
+                           (repro/serving/kv_cache.py) keep prompt-prefix
+                           blocks resident; an optional per-(task, server)
+                           expected-hit-rate predictor shrinks the prefill
+                           term of that server's latency estimate, so
+                           re-routing a conversation to the server that
+                           already holds its prefix scores cheaper.
 """
 from __future__ import annotations
 
@@ -95,25 +102,48 @@ class QLMIORouter:
 
     def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
                  *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
-                 policy=None):
+                 policy=None, prefix_hit_pred=None, prefill_pred=None):
         """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
         P(success).  ``policy`` optionally overrides the scoring rule with a
-        trained QLMIO agent's argmax."""
+        trained QLMIO agent's argmax.
+
+        ``prefix_hit_pred(task, server) -> [0, 1]`` optionally estimates the
+        fraction of the task's prompt already resident in that server's
+        paged KV prefix cache, and ``prefill_pred(task, server) -> seconds``
+        the prefill share of the MILP estimate; together they discount the
+        latency of servers that already hold the conversation's prefix
+        (cost_model.latency_s's ``prefix_hit_rate`` term).
+        """
         self.servers = servers
         self.milp = milp_pred
         self.mgqp = mgqp_pred
         self.w = quality_weight
         self.hedge_factor = hedge_factor
         self.policy = policy
+        self.prefix_hit_pred = prefix_hit_pred
+        self.prefill_pred = prefill_pred
         self.health = HealthTracker(len(servers))
         self.queue_s = np.zeros(len(servers))
         self.now = 0.0
+        self._last_drain = 0.0
         self.log: list[dict] = []
 
     # --------------------------------------------------------------- scoring
-    def _score(self, task: int) -> np.ndarray:
+    def _effective_latency(self, task: int) -> np.ndarray:
+        """Per-server predicted seconds, net of expected prefix-cache hits."""
         n = len(self.servers)
         t_hat = np.array([self.milp(task, s) for s in range(n)])
+        if self.prefix_hit_pred is not None and self.prefill_pred is not None:
+            hit = np.clip([self.prefix_hit_pred(task, s) for s in range(n)],
+                          0.0, 1.0)
+            pre = np.array([self.prefill_pred(task, s) for s in range(n)])
+            t_hat = np.maximum(t_hat - hit * pre, 1e-3)
+        return t_hat
+
+    def _score(self, task: int, t_hat: np.ndarray | None = None) -> np.ndarray:
+        n = len(self.servers)
+        if t_hat is None:
+            t_hat = self._effective_latency(task)
         b_hat = np.array([self.mgqp(task, s) for s in range(n)])
         total = (t_hat + self.queue_s) * np.array(
             [self.health.straggler_factor(s) for s in range(n)])
@@ -123,23 +153,35 @@ class QLMIORouter:
         utility[~self.health.healthy(self.now)] = -np.inf
         return utility
 
-    def route(self, task: int) -> int:
+    def route(self, task: int, t_hat: np.ndarray | None = None) -> int:
         if self.policy is not None:
             a = self.policy(task, self.queue_s, self.health)
             if self.health.healthy(self.now)[a]:
                 return a
-        u = self._score(task)
+        u = self._score(task, t_hat)
         return int(np.argmax(u))
 
     # -------------------------------------------------------------- dispatch
+    def _drain_queues(self):
+        """Work completes as wall-clock advances: shrink every server's
+        backlog by the time elapsed since the last dispatch.  Without this,
+        ``queue_s`` only ever grows and long runs mispredict every server
+        as saturated."""
+        elapsed = self.now - self._last_drain
+        if elapsed > 0:
+            self.queue_s = np.maximum(0.0, self.queue_s - elapsed)
+        self._last_drain = self.now
+
     def dispatch(self, task: int) -> dict:
-        s = self.route(task)
+        self._drain_queues()
+        t_eff = self._effective_latency(task)  # evaluated once per dispatch
+        s = self.route(task, t_eff)
         lat, ok = self.servers[s].execute(task)
-        predicted = self.milp(task, s) + self.queue_s[s]
+        predicted = t_eff[s] + self.queue_s[s]
         hedged = False
         if lat > self.hedge_factor * max(predicted, 0.25):
             # straggler: hedge to the next-best healthy server
-            u = self._score(task)
+            u = self._score(task, t_eff)
             u[s] = -np.inf
             s2 = int(np.argmax(u))
             lat2, ok2 = self.servers[s2].execute(task)

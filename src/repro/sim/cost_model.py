@@ -48,7 +48,7 @@ DEVICES = {
                                       12.5e6, 0.004),
     "rtx3090ti": DeviceProfile("rtx3090ti", 120e12, 800e9, 12.5e6, 0.004),
     "rtx5090": DeviceProfile("rtx5090", 300e12, 1.5e12, 3e6, 0.030),
-    # TPU-native serving classes (hardware adaptation; DESIGN.md §3)
+    # TPU-native serving classes (hardware adaptation; README.md, Design notes)
     "tpu_v5e_1": DeviceProfile("tpu_v5e_1", 197e12, 819e9, 12.5e6, 0.004),
     "tpu_v5e_4": DeviceProfile("tpu_v5e_4", 4 * 197e12, 4 * 819e9,
                                12.5e6, 0.004),
@@ -78,11 +78,24 @@ def expected_out_tokens(model: ModelProfile, difficulty) -> np.ndarray:
     return _COT_BASE + _COT_SCALE * gap ** 2
 
 
-def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
-              difficulty, rng: np.random.Generator | None = None):
-    """Roofline latency; lognormal noise if rng given."""
-    prefill = 2.0 * model.n_active * np.asarray(prompt_tokens) / (
+def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens):
+    """Prefill-only roofline term (the part a prefix-cache hit elides)."""
+    return 2.0 * model.n_active * np.asarray(prompt_tokens) / (
         device.flops * _EFF)
+
+
+def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
+              difficulty, rng: np.random.Generator | None = None,
+              prefix_hit_rate=0.0):
+    """Roofline latency; lognormal noise if rng given.
+
+    ``prefix_hit_rate`` is the expected fraction of prompt tokens already
+    resident in the server's paged KV prefix cache (repro/serving/kv_cache):
+    hit tokens skip prefill compute entirely, so the prefill term scales by
+    ``1 - hit_rate``.  Decode and transmission are unaffected.
+    """
+    hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
+    prefill = prefill_s(device, model, prompt_tokens) * (1.0 - hit)
     out_tok = expected_out_tokens(model, np.asarray(difficulty))
     if rng is not None:
         out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))

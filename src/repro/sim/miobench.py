@@ -2,7 +2,8 @@
 
 3,377 tasks x 3 server classes = 10,131 offloading records with the fields of
 Table II.  Records are synthesized from the quarantined cost model
-(repro/sim/cost_model.py) — see DESIGN.md §4 for the fidelity discussion.
+(repro/sim/cost_model.py) — see the "Design notes" section of the top-level
+README.md for the fidelity discussion.
 """
 from __future__ import annotations
 

@@ -11,14 +11,36 @@ import os
 import re
 import shutil
 import time
+import zlib
 from typing import Any
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dep: fall back to stdlib zlib when absent
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _SEP = "/"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed; pip install zstandard to read it")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree, prefix="") -> dict:
@@ -74,9 +96,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3,
                 "shape": list(arr.shape),
                 "data": arr.tobytes(),
             }
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True)
-    )
+    blob = _compress(msgpack.packb(payload, use_bin_type=True))
     final = os.path.join(directory, f"ckpt_{step:010d}")
     tmp = final + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
     os.makedirs(tmp)
@@ -126,9 +146,7 @@ def load_checkpoint(directory: str, step: int | None = None):
     path = os.path.join(directory, f"ckpt_{step:010d}")
     with open(os.path.join(path, "tree.msgpack.zst"), "rb") as f:
         blob = f.read()
-    payload = msgpack.unpackb(
-        zstandard.ZstdDecompressor().decompress(blob), raw=False
-    )
+    payload = msgpack.unpackb(_decompress(blob), raw=False)
     flat = {}
     for p, rec in payload.items():
         if rec is None:

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim (satellite of ISSUE 1).
+
+``pytest.importorskip("hypothesis")`` at module scope would skip entire
+test modules; these stand-ins instead make only the ``@given`` property
+tests skip at runtime when the dependency is absent, so the plain tests
+in the same module still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<strategy>(...)`` call and returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            # plain (*args, **kwargs) signature so pytest does not treat
+            # the hypothesis-bound parameters as fixtures
+            def stub(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco

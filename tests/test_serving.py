@@ -101,6 +101,34 @@ def test_router_hedges_stragglers():
     assert rec["hedged"] and rec["server"] == 1
 
 
+def test_router_queue_drains_with_time():
+    """Regression: queue_s must shrink as wall-clock advances, not grow
+    without bound (long runs used to predict every server saturated)."""
+    servers = [_mk_server("a", 0.05), _mk_server("b", 0.05)]
+    router = QLMIORouter(servers, lambda t, s: 0.05, lambda t, s: 0.9)
+    for t in range(200):
+        router.dispatch(t)
+    # 0.05 s of work per dispatch vs 0.1 s elapsed: queues stay ~empty
+    assert router.queue_s.max() <= 0.1
+    # and the predicted total latency stays close to the true latency
+    rec = router.dispatch(999)
+    assert rec["latency"] < 1.0
+
+
+def test_router_prefers_server_holding_prefix():
+    """Prefix-cache affinity: with identical raw latency estimates, the
+    server expected to hold the conversation's KV prefix wins."""
+    servers = [_mk_server("cold", 6.0), _mk_server("warm", 6.0)]
+    router = QLMIORouter(
+        servers, lambda t, s: 6.0, lambda t, s: 0.9,
+        prefix_hit_pred=lambda t, s: 0.9 if s == 1 else 0.0,
+        prefill_pred=lambda t, s: 5.0)
+    assert router.route(0) == 1
+    # without the predictor the tie breaks to the first server
+    base = QLMIORouter(servers, lambda t, s: 6.0, lambda t, s: 0.9)
+    assert base.route(0) == 0
+
+
 def test_router_elastic_scaling():
     servers = [_mk_server("a", 5.0)]
     router = QLMIORouter(servers, lambda t, s: 5.0, lambda t, s: 0.9)
