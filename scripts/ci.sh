@@ -15,3 +15,6 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python scripts/smoke_decode.py
+# serving prefill smoke: mixed-length TTFT/ITL + compile-count rows
+# (bucketed+chunked scheduler vs. legacy recompile-storm path)
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py serving

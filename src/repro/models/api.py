@@ -28,7 +28,9 @@ from repro.models import lm
 from repro.models import mamba2 as m2
 from repro.models import xlstm as xl
 from repro.kernels.paged_decode import paged_decode_tpu
-from repro.models.attention import (decode_attention, flash_attention,
+from repro.models.attention import (chunk_prefill_attention, decode_attention,
+                                    flash_attention,
+                                    paged_chunk_prefill_attention,
                                     paged_decode_attention)
 from repro.nn.layers import apply_rope
 from repro.nn.spec import abstract_params, init_params
@@ -156,24 +158,56 @@ class Model:
                 "v_pages": _sds(shape, jnp.bfloat16)}
 
     # ------------------------------------------------------------- prefill
+    @property
+    def supports_bucketed_prefill(self) -> bool:
+        """Shape-bucketed (padded) prefill needs a *positional* cache so the
+        padding writes nothing a later decode step can see: attention K/V
+        entries past the true length are masked via pos_map and overwritten
+        in place as decoding reaches them.  Recurrent state (mamba, xlstm)
+        integrates every input token, so padding would corrupt it."""
+        return self.cfg.block_kind == "attn"
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill appends chunk K/V into the serving cache and
+        attends back through it — same family gate as paged serving."""
+        return self.supports_paged
+
     def prefill(self, params, batch):
-        """Returns (last-token logits [B,V], cache)."""
+        """Returns (last-token logits [B,V], cache).
+
+        ``batch["length"]`` [B] int32 optionally carries true prompt lengths
+        when ``tokens`` is right-padded to a shape bucket (the serving
+        engine's anti-recompile-storm path): pos_map marks padded positions
+        empty (-1) and the logits are taken at ``length - 1`` instead of the
+        last column.  Causal masking guarantees the padded tail never
+        influences real positions.  Only attention-family caches support
+        this (``supports_bucketed_prefill``).
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
+        length = batch.get("length")
         B, S = tokens.shape
+        if length is not None and not self.supports_bucketed_prefill:
+            raise ValueError(
+                f"{cfg.name}: bucketed (padded) prefill needs a positional "
+                "cache; recurrent state would integrate the padding")
+        if length is None:
+            pos_map = jnp.broadcast_to(jnp.arange(S), (B, S))
+        else:
+            pos_map = lm.prompt_pos_map(length, S)
         if cfg.cross_attention:
             enc = lm.whisper_encode(cfg, params, batch["encoder_frames"])
             h, kvs = lm.whisper_decode_forward(cfg, params, tokens, enc,
                                                return_cache=True)
             k, v, xk, xv = kvs
-            cache = {"k": k, "v": v, "xk": xk, "xv": xv,
-                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
+            cache = {"k": k, "v": v, "xk": xk, "xv": xv, "pos_map": pos_map}
         elif cfg.block_kind == "mamba_hybrid":
             h, caches = lm.zamba2_forward(cfg, params, tokens,
                                           return_cache=True)
             (conv, ssm), (k, v) = caches
             cache = {"conv": conv, "ssm": ssm, "k": k, "v": v,
-                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
+                     "pos_map": pos_map}
         elif cfg.block_kind == "xlstm":
             h, caches = lm.xlstm_forward(cfg, params, tokens,
                                          return_cache=True)
@@ -183,9 +217,8 @@ class Model:
         else:
             h, (k, v) = lm.attn_forward(cfg, params, tokens,
                                         return_cache=True)
-            cache = {"k": k, "v": v,
-                     "pos_map": jnp.broadcast_to(jnp.arange(S), (B, S))}
-        logits = lm.last_logits(cfg, params, h[:, -1])
+            cache = {"k": k, "v": v, "pos_map": pos_map}
+        logits = lm.last_logits(cfg, params, lm.last_hidden(h, length))
         return logits, cache
 
     def prefill_with_prefix(self, params, batch, prefix_k, prefix_v):
@@ -196,6 +229,10 @@ class Model:
         prefix K/V (already rope'd, as stored by prefill).  Returns
         (last-token logits [B, V], (k_sfx, v_sfx) [L, B, Ssfx, Hkv, Dh]) —
         the prefix blocks are reused, only the suffix is computed.
+
+        ``batch["length"]`` [B] int32 optionally carries the true suffix
+        length when the suffix is right-padded to a shape bucket; the
+        caller then scatters only the first ``length`` K/V columns.
         """
         cfg = self.cfg
         if not self.supports_paged:
@@ -203,7 +240,8 @@ class Model:
         h, (k, v) = lm.attn_forward(cfg, params, batch["tokens"],
                                     return_cache=True,
                                     prefix_kv=(prefix_k, prefix_v))
-        logits = lm.last_logits(cfg, params, h[:, -1])
+        logits = lm.last_logits(cfg, params,
+                                lm.last_hidden(h, batch.get("length")))
         return logits, (k, v)
 
     # ------------------------------------------------------------- decode
@@ -256,22 +294,47 @@ class Model:
             f = lm._norm(pl, f, cfg.norm, "pn2")
         return y + f, kv
 
+    def _chunk_layer(self, pl, x, kv, qpos, rope, window, attend):
+        """One attn-family chunked-prefill layer; mirrors ``_decode_layer``
+        with a C-token chunk of queries instead of a single token.
+
+        x [B, C, d]; qpos [B, C] absolute query positions; ``attend`` owns
+        the cache write and the contraction, so the dense (slot-region) and
+        paged (block-table) serving paths share everything else.
+        """
+        cfg = self.cfg
+        B, C, _ = x.shape
+        cos, sin = rope
+        xn = lm._norm(pl, x, cfg.norm, "ln1")
+        q, k, v = lm._qkv(pl["attn"], cfg, xn, B, C)
+        q = apply_rope(q, cos, sin, qpos)
+        k = apply_rope(k, cos, sin, qpos)
+        o, kv = attend(q, k, v, kv, window)
+        o = o.reshape(B, C, -1) @ pl["attn"]["wo"].astype(x.dtype)
+        if cfg.post_norms:
+            o = lm._norm(pl, o, cfg.norm, "pn1")
+        return lm._ffn(pl, cfg, x + o), kv
+
     def _attn_decode_scan(self, params, x, pos, k_all, v_all, rope_len,
-                          attend):
-        """Layer-scan driver shared by the dense and paged decode paths.
+                          attend, layer_fn=None):
+        """Layer-scan driver shared by the dense and paged decode paths
+        (``layer_fn=_decode_layer``, the default) and their chunked-prefill
+        counterparts (``layer_fn=_chunk_layer``; x/pos then carry a C-token
+        chunk dim).
 
         ``k_all``/``v_all`` are per-layer cache leaves stacked on dim 0
         ([L, B, Sa, ...] dense, [L, P, bs, ...] paged); returns
-        (hidden [B, d], k_new, v_new) with the same stacking.
+        (hidden, k_new, v_new) with the same stacking.
         """
         cfg = self.cfg
+        layer_fn = layer_fn or self._decode_layer
         rope_l, rope_g = lm._rope_tables(cfg, rope_len)
 
         if cfg.attn_pattern != "local_global":
             def body(x, xs):
                 pl, kc, vc = xs
-                y, (kc, vc) = self._decode_layer(pl, x, (kc, vc), pos,
-                                                 rope_g, 0, attend)
+                y, (kc, vc) = layer_fn(pl, x, (kc, vc), pos,
+                                       rope_g, 0, attend)
                 return y, (kc, vc)
 
             x, (k_new, v_new) = jax.lax.scan(
@@ -290,7 +353,7 @@ class Model:
             for idx in range(P_):
                 pl = jax.tree.map(lambda a: a[idx], pg)
                 is_g = idx == P_ - 1
-                x, (kc, vc) = self._decode_layer(
+                x, (kc, vc) = layer_fn(
                     pl, x, (kcs[idx], vcs[idx]), pos,
                     rope_g if is_g else rope_l,
                     0 if is_g else cfg.window, attend)
@@ -302,7 +365,7 @@ class Model:
         tail_k, tail_v = [], []
         for t in range(n_tail):
             pl = jax.tree.map(lambda a: a[t], tail)
-            x, (kc, vc) = self._decode_layer(
+            x, (kc, vc) = layer_fn(
                 pl, x, (k_all[n_full + t], v_all[n_full + t]),
                 pos, rope_l, cfg.window, attend)
             tail_k.append(kc)
@@ -380,6 +443,102 @@ class Model:
             attend)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x)
+        return logits, {"k_pages": k_new, "v_pages": v_new}
+
+    # ------------------------------------------------------- chunked prefill
+    def prefill_chunk_dense(self, params, cache, batch):
+        """One bucketed prefill chunk into one dense-cache slot.
+
+        cache  = the engine's batched dense cache {k, v [L, B, Sa, Hkv, Dh],
+                 pos_map [B, Sa]}
+        batch  = {tokens [1, C] (right-padded to the chunk bucket),
+                  slot [] int32, pos [] int32 (tokens already in the slot),
+                  length [] int32 (true chunk length)}
+
+        The chunk's K/V is written at positions ``[pos, pos+length)`` of row
+        ``slot`` (padded columns are dropped via out-of-bounds scatter
+        indices, which XLA discards), then the chunk queries attend back
+        through the whole slot region — write-then-attend, so in-chunk
+        causality falls out of the pos_map mask.  Returns (logits [1, V] of
+        the chunk's last real token, cache).  Compile variants are bounded
+        by the number of chunk buckets: every other argument is
+        shape-static.
+        """
+        cfg = self.cfg
+        tokens, slot = batch["tokens"], batch["slot"]
+        pos0, n = batch["pos"], batch["length"]
+        B, C = tokens.shape
+        Sa = cache["k"].shape[2]
+        dt = jnp.dtype(cfg.act_dtype)
+        x = params["embed"]["table"].astype(dt)[tokens]  # [1, C, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        positions = (pos0 + jnp.arange(C)).astype(jnp.int32)  # [C]
+        wpos = jnp.where(jnp.arange(C) < n, positions, Sa)  # OOB -> dropped
+        qpos = positions[None]  # [1, C]
+        pos_map = cache["pos_map"].at[slot, wpos].set(positions)
+
+        def attend(q, k, v, kv, window):
+            kc, vc = kv
+            kc = kc.at[slot, wpos].set(k[0].astype(kc.dtype))
+            vc = vc.at[slot, wpos].set(v[0].astype(vc.dtype))
+            o = chunk_prefill_attention(q, kc[slot][None], vc[slot][None],
+                                        pos_map[slot][None], qpos,
+                                        window=window)
+            return o, (kc, vc)
+
+        x, k_new, v_new = self._attn_decode_scan(
+            params, x, qpos, cache["k"], cache["v"], Sa, attend,
+            layer_fn=self._chunk_layer)
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x[jnp.arange(B), n - 1])
+        return logits, {"k": k_new, "v": v_new, "pos_map": pos_map}
+
+    def prefill_chunk_paged(self, params, cache, batch):
+        """One bucketed prefill chunk into a paged-cache block table.
+
+        cache  = {k_pages, v_pages [L, P, bs, Hkv, Dh]}
+        batch  = {tokens [1, C] (right-padded to the chunk bucket),
+                  block_tables [1, NB] int32 (the slot's table, covering at
+                  least ``pos+length`` positions), pos [] int32, length []
+                  int32}
+
+        Scatters the chunk's K/V into its pages (padded columns dropped via
+        out-of-bounds page ids) and attends back through the block table —
+        the prefix-cache hit path needs no special casing: hit pages are
+        simply already present in the table and ``pos`` starts past them.
+        """
+        cfg = self.cfg
+        tokens, tables = batch["tokens"], batch["block_tables"]
+        pos0, n = batch["pos"], batch["length"]
+        B, C = tokens.shape
+        P, bs = cache["k_pages"].shape[1:3]
+        NB = tables.shape[1]
+        dt = jnp.dtype(cfg.act_dtype)
+        x = params["embed"]["table"].astype(dt)[tokens]  # [1, C, d]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        positions = (pos0 + jnp.arange(C)).astype(jnp.int32)  # [C]
+        valid = jnp.arange(C) < n
+        blk = jnp.clip(positions // bs, 0, NB - 1)
+        page = jnp.maximum(tables[0, blk], 0)
+        wpage = jnp.where(valid, page, P)  # OOB -> dropped
+        off = positions % bs
+        qpos = positions[None]  # [1, C]
+
+        def attend(q, k, v, kv, window):
+            kp, vp = kv
+            kp = kp.at[wpage, off].set(k[0].astype(kp.dtype))
+            vp = vp.at[wpage, off].set(v[0].astype(vp.dtype))
+            o = paged_chunk_prefill_attention(q, kp, vp, tables, qpos,
+                                              window=window)
+            return o, (kp, vp)
+
+        x, k_new, v_new = self._attn_decode_scan(
+            params, x, qpos, cache["k_pages"], cache["v_pages"], NB * bs,
+            attend, layer_fn=self._chunk_layer)
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x[jnp.arange(B), n - 1])
         return logits, {"k_pages": k_new, "v_pages": v_new}
 
     def _zamba2_decode(self, params, cache, x, pos):

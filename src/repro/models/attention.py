@@ -302,6 +302,64 @@ def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
     return o.astype(q.dtype)
 
 
+def chunk_prefill_attention(q, k_cache, v_cache, cache_positions, qpos, *,
+                            window: int = 0, scale: float | None = None,
+                            softcap: float = 0.0):
+    """Chunked-prefill attention: C query tokens against a KV cache.
+
+    q [B, C, H, D]; k_cache/v_cache [B, S, Hkv, D]; cache_positions [B, S]
+    absolute position per cache entry (-1 = empty); qpos [B, C] absolute
+    query positions.  The chunk's own K/V must already be written into the
+    cache (write-then-attend): in-chunk causality then falls out of the
+    ``cache_positions <= qpos`` mask, and padded/bucketed query rows
+    (qpos beyond the true chunk length) produce garbage the caller ignores.
+    Generalizes ``decode_attention`` from C=1 to a whole prefill chunk.
+    """
+    B, C, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, C, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (cache_positions >= 0)[:, None, :] \
+        & (cache_positions[:, None, :] <= qpos[:, :, None])  # [B, C, S]
+    if window:
+        valid &= (qpos[:, :, None] - cache_positions[:, None, :]) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, C, H, D).astype(q.dtype)
+
+
+def paged_chunk_prefill_attention(q, k_pages, v_pages, block_tables, qpos, *,
+                                  window: int = 0, scale: float | None = None,
+                                  softcap: float = 0.0):
+    """Chunked-prefill attention against a paged KV cache (one layer).
+
+    q [B, C, H, D]; k_pages/v_pages [P, bs, Hkv, D]; block_tables [B, NB]
+    int32 (-1 = unallocated); qpos [B, C] absolute query positions.  The
+    chunk's K/V must already be scattered into its pages; entries past a
+    query's position (stale data in freshly-allocated pages, bucketing
+    padding) are masked exactly like ``paged_decode_attention``.
+    """
+    B = q.shape[0]
+    P, bs, Hkv, D = k_pages.shape
+    NB = block_tables.shape[1]
+    bt = jnp.maximum(block_tables, 0)  # clamp -1 -> null page, masked below
+    kc = k_pages[bt].reshape(B, NB * bs, Hkv, D)
+    vc = v_pages[bt].reshape(B, NB * bs, Hkv, D)
+    logical = (jnp.arange(NB)[:, None] * bs
+               + jnp.arange(bs)[None, :])  # [NB, bs]
+    cpos = jnp.where((block_tables >= 0)[:, :, None], logical[None], -1)
+    return chunk_prefill_attention(q, kc, vc, cpos.reshape(B, NB * bs), qpos,
+                                   window=window, scale=scale,
+                                   softcap=softcap)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
                            window: int = 0, scale: float | None = None,
                            softcap: float = 0.0):

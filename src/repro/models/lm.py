@@ -595,6 +595,26 @@ def chunked_xent(cfg: ArchConfig, params, hidden, labels, *, chunk=512):
     return tot / jnp.maximum(cnt, 1.0)
 
 
+def last_hidden(h, length=None):
+    """Select the true last-token hidden state of a (possibly padded) batch.
+
+    h [B, S, d]; ``length`` [B] int32 true sequence lengths when the batch
+    is padded to a shape bucket (serving prefill), else None for ``h[:, -1]``.
+    """
+    if length is None:
+        return h[:, -1]
+    B = h.shape[0]
+    return h[jnp.arange(B), length - 1]
+
+
+def prompt_pos_map(length, S):
+    """pos_map row for a bucket-padded prompt: position for the first
+    ``length`` entries, -1 (= empty, masked at decode) for the padding."""
+    B = length.shape[0]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return jnp.where(pos < length[:, None], pos, -1)
+
+
 def last_logits(cfg: ArchConfig, params, hidden_last):
     """hidden_last [B, d] -> [B, V] fp32 logits."""
     head = (params["embed"]["table"].T if cfg.tie_embeddings

@@ -1,21 +1,31 @@
 """Slot-based continuous-batching serving engine with a paged KV cache.
 
 A fixed decode batch of ``max_batch`` slots steps in lockstep (one
-``serve_step`` per tick).  Arriving requests are prefilled individually and
-spliced into a free slot; finished slots are freed immediately, so long
-requests never block short ones (continuous batching).
+``serve_step`` per tick).  Arriving requests are prefilled into a free slot;
+finished slots are freed immediately, so long requests never block short
+ones (continuous batching).
 
 Two cache backends:
 
   * **paged** (default for the pure-attention family) — K/V live in a
     shared page pool (``repro/serving/kv_cache.py``); each slot holds a
-    block table instead of a dense ``max_seq`` region, prefill is never
-    padded, freed requests return their pages, and identical prompt
-    prefixes across requests are served from the prefix trie without
-    recomputation (suffix-only prefill + copy-on-write).
+    block table instead of a dense ``max_seq`` region, freed requests
+    return their pages, and identical prompt prefixes across requests are
+    served from the prefix trie without recomputation (copy-on-write).
   * **dense** — the original one-region-per-slot layout, still used for
     recurrent/hybrid/cross-attention cache families (zamba2, xlstm,
     whisper) whose state is not an append-only token sequence.
+
+Prefill scheduling (attention family): prompts are **shape-bucketed** —
+right-padded to power-of-two lengths with the true length threaded through
+``Model.prefill``/``prefill_chunk_*`` — so a mixed-length workload traces
+O(log max_seq) XLA variants instead of one per distinct prompt length, and
+**chunked** — long prompts append into the cache ``prefill_chunk`` tokens
+at a time under a per-tick ``prefill_budget``, sharing ticks with decode
+steps so a long prompt no longer stalls every running decode for its whole
+prefill (mixed prefill/decode continuous batching).  Recurrent/hybrid
+families keep exact-shape monolithic prefill: their state integrates every
+input token, so padding would corrupt it.
 
 Works for every arch family — per-leaf cache batch dims are keyed by the
 cache layout names in repro/models/api.py.
@@ -23,6 +33,7 @@ cache layout names in repro/models/api.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable
 
@@ -32,6 +43,21 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.serving.kv_cache import BlockPool, BlockTable, OutOfPagesError
+
+
+def bucket_length(n: int, *, minimum: int = 16, maximum: int | None = None
+                  ) -> int:
+    """Smallest power-of-two >= n, clamped to [minimum, maximum].
+
+    Prefill shapes are padded to these buckets so the number of distinct
+    XLA traces is O(log max_seq) rather than one per prompt length.
+    """
+    if n < 1:
+        raise ValueError(f"bucket_length needs n >= 1, got {n}")
+    if maximum is not None and n > maximum:
+        raise ValueError(f"bucket_length: n={n} exceeds maximum={maximum}")
+    b = max(minimum, 1 << (n - 1).bit_length())
+    return b if maximum is None else min(b, maximum)
 
 # batch-dim index per cache leaf name (see Model.abstract_cache layouts)
 _BATCH_DIM = {"k": 1, "v": 1, "xk": 1, "xv": 1, "pos_map": 0,
@@ -50,6 +76,25 @@ class Request:
     # filled during serving:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0
+    token_times: list = dataclasses.field(default_factory=list)
+
+    def ttft_s(self) -> float:
+        """Wall-clock time-to-first-token (prefill + queueing)."""
+        return self.token_times[0] - self.t_submit
+
+    def itl_s(self) -> list:
+        """Wall-clock inter-token latencies of the decode phase."""
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """In-flight chunked prefill of one slot (prompt partially in cache)."""
+    req: Request
+    done: int  # prompt tokens already in the cache (incl. prefix reuse)
+    reused: int = 0  # prefix-cache tokens among ``done``
+    logits: Any = None  # last chunk's next-token logits [1, V]
 
 
 class ServingEngine:
@@ -57,7 +102,20 @@ class ServingEngine:
                  max_seq: int = 256, eos_id: int | None = None,
                  greedy: bool = True, paged: bool | None = None,
                  page_size: int = 16, num_pages: int | None = None,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True, prefill_chunk: int = 64,
+                 prefill_budget: int | None = None,
+                 bucket_prompts: bool = True, min_bucket: int = 16):
+        """``prefill_chunk`` — tokens appended to the cache per chunked
+        prefill call (0 disables chunking: one monolithic, still bucketed,
+        prefill per admission).  ``prefill_budget`` — prefill tokens spent
+        per engine tick before the decode step runs (default
+        ``2 * prefill_chunk``); bounds how long any prompt can stall
+        running decodes.  ``bucket_prompts`` — pad prompt (and chunk)
+        shapes to power-of-two buckets >= ``min_bucket`` so XLA compiles
+        O(log max_seq) prefill variants instead of one per prompt length.
+        Both knobs apply to the attention family only; recurrent/hybrid
+        caches always use exact-shape monolithic prefill.
+        """
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -72,7 +130,18 @@ class ServingEngine:
             raise ValueError(
                 f"{model.cfg.name}: paged serving needs an attention-family "
                 "cache; use paged=False")
+        self.bucketing = bucket_prompts and model.supports_bucketed_prefill
+        self.chunked = prefill_chunk > 0 and model.supports_chunked_prefill
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else 2 * max(prefill_chunk, 1))
+        self.min_bucket = min_bucket
+        self.prefill_tasks: list[_PrefillTask | None] = [None] * max_batch
+        self._traced: set = set()  # distinct prefill-path trace shapes
         self._prefill = jax.jit(model.prefill)
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_padded = 0
+        self.prefix_tokens_reused = 0
         if self.paged:
             self.page_size = page_size
             self.max_blocks = -(-max_seq // page_size)
@@ -89,12 +158,14 @@ class ServingEngine:
             self.block_tables: list[BlockTable | None] = [None] * max_batch
             self._step = jax.jit(model.serve_step_paged)
             self._prefill_sfx = jax.jit(model.prefill_with_prefix)
-            self.prefill_tokens_computed = 0
-            self.prefix_tokens_reused = 0
+            self._prefill_chunk = jax.jit(model.prefill_chunk_paged)
         else:
             self.cache = self._empty_cache()
             self._step = jax.jit(model.serve_step)
+            if self.chunked:
+                self._prefill_chunk = jax.jit(model.prefill_chunk_dense)
         self.ticks = 0
+        self._progress = False
         self.finished: list[Request] = []
 
     # ----------------------------------------------------- dense internals
@@ -121,14 +192,32 @@ class ServingEngine:
             new[name] = leaf.at[tuple(idx)].set(rc.astype(leaf.dtype))
         self.cache = new
 
-    def _admit_dense(self, slot: int, req: Request) -> bool:
-        toks = jnp.asarray(req.tokens, jnp.int32)[None]
-        batch = {"tokens": toks, **(req.extra or {})}
+    def _bucket(self, n: int, *, cap: int | None = None) -> int:
+        if not self.bucketing:
+            return n
+        return bucket_length(n, minimum=self.min_bucket,
+                             maximum=self.max_seq if cap is None else cap)
+
+    def _padded_prompt(self, toks: np.ndarray, n_pad: int) -> jnp.ndarray:
+        out = np.zeros(n_pad, np.int32)
+        out[:len(toks)] = toks
+        return jnp.asarray(out)[None]
+
+    def _admit_dense(self, slot: int, req: Request) -> "int | None":
+        """Monolithic (bucketed) prefill into a dense slot; returns the
+        first sampled token."""
+        T = len(req.tokens)
+        Sb = self._bucket(T)
+        batch = {"tokens": self._padded_prompt(req.tokens, Sb),
+                 **(req.extra or {})}
+        if self.bucketing:
+            batch["length"] = jnp.asarray([T], jnp.int32)
+        self._traced.add(("prefill", Sb))
         logits, rc = self._prefill(self.params, batch)
-        first = int(jnp.argmax(logits[0]))
-        self._splice(slot, rc, len(req.tokens))
-        req.output.append(first)
-        return True
+        self._splice(slot, rc, T)
+        self.prefill_tokens_computed += T
+        self.prefill_tokens_padded += Sb - T
+        return int(jnp.argmax(logits[0]))
 
     # ----------------------------------------------------- paged internals
     def _cow_page(self, table: BlockTable, blk: int):
@@ -148,83 +237,130 @@ class ServingEngine:
         return -(-horizon // self.page_size)
 
     def _growth_outstanding(self) -> int:
-        """Pages active slots may still allocate as their decodes grow."""
-        return sum(self._total_blocks(r) - len(self.block_tables[i].pages)
-                   for i, r in enumerate(self.slots) if r is not None)
+        """Pages occupied slots may still allocate: decode growth of active
+        requests plus the full remaining horizon of mid-chunked-prefill
+        slots (their tables hold prompt pages only so far) — admission must
+        count both or a promoted request's decode-time ensure_capacity can
+        hit an exhausted pool."""
+        out = sum(self._total_blocks(r) - len(self.block_tables[i].pages)
+                  for i, r in enumerate(self.slots) if r is not None)
+        out += sum(self._total_blocks(t.req)
+                   - len(self.block_tables[i].pages)
+                   for i, t in enumerate(self.prefill_tasks)
+                   if t is not None)
+        return out
 
-    def _admit_paged(self, slot: int, req: Request) -> bool:
+    def _clip_reuse(self, n_reuse: int) -> int:
+        """Bound the prefill_with_prefix trace variants on the monolithic
+        path: the reused prefix length is a shape dim of that call, so round
+        it down to a power-of-two number of pages — O(log max_seq) prefix
+        shapes instead of one per distinct hit length.  The chunked path
+        has no shape dependence on the reuse length and keeps every token.
+        """
+        if self.chunked or not self.bucketing or n_reuse <= 0:
+            return n_reuse
+        blocks = n_reuse // self.page_size
+        if blocks == 0:
+            return 0
+        return (1 << (blocks.bit_length() - 1)) * self.page_size
+
+    def _reserve_table(self, req: Request) -> "tuple[BlockTable, int] | None":
+        """Admission control + page reservation for a paged request.
+
+        Returns ``(table, n_reuse)`` with the prefix-hit pages retained and
+        capacity for the whole prompt allocated, or None (request must wait)
+        when the pool cannot cover this request's worst case on top of every
+        active slot's remaining decode growth — so mid-stream page
+        allocation can never fail.  Uses the side-effect-free peek first so
+        queued retries don't inflate hit stats or churn the LRU.  ``need``
+        counts every page this admission removes from the allocatable
+        supply: fresh allocations, plus hit pages currently parked in the
+        LRU (retaining those shrinks ``num_free`` even though they need no
+        allocation), plus the copy-on-write page of a fully-cached prompt.
+        """
         toks = np.asarray(req.tokens, np.int64)
         T = len(toks)
         bs = self.page_size
-        # admission control: admit only if the pool can cover this request's
-        # worst case on top of every active slot's remaining decode growth,
-        # so mid-stream page allocation can never fail.  Uses the
-        # side-effect-free peek so queued retries don't inflate hit stats
-        # or churn the LRU.  ``need`` counts every page this admission
-        # removes from the allocatable supply: fresh allocations, plus hit
-        # pages currently parked in the LRU (retaining those shrinks
-        # ``num_free`` even though they need no allocation), plus the
-        # copy-on-write page of a fully-cached prompt.
         hit_pages = self.pool.peek_prefix(toks) if self.prefix_caching \
             else []
-        n_hit_pages = len(hit_pages)
-        need = self._total_blocks(req) - n_hit_pages
-        need += sum(1 for p in hit_pages if self.pool.ref[p] == 0)
-        if n_hit_pages * bs >= T:
+        est = self._clip_reuse(min(len(hit_pages) * bs, T - 1))
+        used = hit_pages[:-(-est // bs)] if est else []
+        need = self._total_blocks(req) - len(used)
+        need += sum(1 for p in used if self.pool.ref[p] == 0)
+        if est and est % bs:
             need += 1  # fully-cached prompt: copy-on-write of the last page
         if self.pool.num_free() - self._growth_outstanding() < need:
-            self.queue.appendleft(req)
-            return False
+            return None
         table = BlockTable(self.pool)
         n_reuse = 0
         if self.prefix_caching:
             table.pages, n_hit = self.pool.lookup_prefix(toks)
             # a fully-cached prompt still needs its last token recomputed
             # for the next-token logits -> copy-on-write on the final page
-            n_reuse = min(n_hit, T - 1)
+            n_reuse = self._clip_reuse(min(n_hit, T - 1))
+            keep = -(-n_reuse // bs)
+            for p in table.pages[keep:]:  # rounded-off / unused hit pages
+                self.pool.release(p)
+            table.pages = table.pages[:keep]
         try:
-            if n_reuse == 0:
-                if table.pages:
-                    table.free()
-                logits, rc = self._prefill(
-                    self.params,
-                    {"tokens": jnp.asarray(toks, jnp.int32)[None],
-                     **(req.extra or {})})
-                sk, sv = rc["k"], rc["v"]  # [L, 1, T, Hkv, Dh]
-            else:
-                kp, vp = self.cache["k_pages"], self.cache["v_pages"]
-                pre = np.asarray(table.pages, np.int32)
-                L, _, _, Hkv, Dh = kp.shape
-                pk = kp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
-                pv = vp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
-                logits, (sk, sv) = self._prefill_sfx(
-                    self.params,
-                    {"tokens": jnp.asarray(toks[n_reuse:], jnp.int32)[None]},
-                    pk, pv)
             first_blk = n_reuse // bs
-            if first_blk < len(table.pages):
+            if n_reuse and first_blk < len(table.pages):
                 self._cow_page(table, first_blk)
             table.ensure_capacity(T)
-        except OutOfPagesError:
+        except OutOfPagesError:  # admission control should prevent this
             table.free()
-            self.queue.appendleft(req)  # retry once capacity frees up
-            return False
-        # scatter the computed suffix K/V into this request's pages
-        sfx_pos = np.arange(n_reuse, T)
-        pages = np.asarray([table.pages[p // bs] for p in sfx_pos], np.int32)
-        offs = (sfx_pos % bs).astype(np.int32)
+            return None
+        return table, n_reuse
+
+    def _scatter_kv(self, table: BlockTable, positions: np.ndarray, sk, sv,
+                    n: int):
+        """Scatter ``n`` computed K/V columns ([L, 1, >=n, Hkv, Dh]) into
+        the request's pages at the given logical positions."""
+        pages, offs = table.rows_for(positions)
         for name, leaves in (("k_pages", sk), ("v_pages", sv)):
             leaf = self.cache[name]
             self.cache[name] = leaf.at[:, pages, offs].set(
-                leaves[:, 0].astype(leaf.dtype))
+                leaves[:, 0, :n].astype(leaf.dtype))
+
+    def _admit_paged(self, slot: int, req: Request) -> "int | None":
+        """Monolithic (bucketed) paged prefill; returns the first sampled
+        token, or None when the pool cannot admit the request yet."""
+        reserved = self._reserve_table(req)
+        if reserved is None:
+            return None
+        table, n_reuse = reserved
+        toks = np.asarray(req.tokens, np.int64)
+        T = len(toks)
+        n_sfx = T - n_reuse
+        Sb = self._bucket(n_sfx)
+        if n_reuse == 0:
+            batch = {"tokens": self._padded_prompt(toks, Sb),
+                     **(req.extra or {})}
+            if self.bucketing:
+                batch["length"] = jnp.asarray([T], jnp.int32)
+            self._traced.add(("prefill", Sb))
+            logits, rc = self._prefill(self.params, batch)
+            sk, sv = rc["k"], rc["v"]  # [L, 1, Sb, Hkv, Dh]
+        else:
+            kp, vp = self.cache["k_pages"], self.cache["v_pages"]
+            pre = np.asarray(table.pages, np.int32)
+            L, _, _, Hkv, Dh = kp.shape
+            pk = kp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+            pv = vp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+            batch = {"tokens": self._padded_prompt(toks[n_reuse:], Sb)}
+            if self.bucketing:
+                batch["length"] = jnp.asarray([n_sfx], jnp.int32)
+            self._traced.add(("prefill_sfx", n_reuse, Sb))
+            logits, (sk, sv) = self._prefill_sfx(self.params, batch, pk, pv)
+        self._scatter_kv(table, np.arange(n_reuse, T), sk, sv, n_sfx)
         if self.prefix_caching:
-            self.pool.register_prefix(toks, table.pages[:T // bs])
-        self.prefill_tokens_computed += T - n_reuse
+            self.pool.register_prefix(toks, table.pages[:T // self.page_size])
+        self.prefill_tokens_computed += n_sfx
+        self.prefill_tokens_padded += Sb - n_sfx
         self.prefix_tokens_reused += n_reuse
-        req.output.append(int(jnp.argmax(logits[0])))
         self.block_tables[slot] = table
         self.tables[slot] = table.as_row(self.max_blocks)
-        return True
+        return int(jnp.argmax(logits[0]))
 
     def _free_slot(self, slot: int):
         self.slots[slot] = None
@@ -234,48 +370,194 @@ class ServingEngine:
             self.tables[slot] = -1
             self.pos[slot] = 0
 
+    # -------------------------------------------------- chunked prefill
+    def _start_prefill(self, slot: int, req: Request) -> bool:
+        """Begin a chunked prefill in ``slot``; False => requeued (paged
+        pool cannot cover the request yet)."""
+        if self.paged:
+            reserved = self._reserve_table(req)
+            if reserved is None:
+                self.queue.appendleft(req)
+                return False
+            table, n_reuse = reserved
+            self.block_tables[slot] = table
+            self.tables[slot] = table.as_row(self.max_blocks)
+            self.prefix_tokens_reused += n_reuse
+        else:
+            n_reuse = 0
+            # chunk writes no longer overwrite the whole slot region, so
+            # stale pos_map entries from the previous occupant must be
+            # cleared up front (stale K/V is then masked everywhere)
+            self.cache["pos_map"] = self.cache["pos_map"].at[slot].set(-1)
+        self.prefill_tasks[slot] = _PrefillTask(req, done=n_reuse,
+                                                reused=n_reuse)
+        return True
+
+    def _advance_prefill(self, slot: int) -> int:
+        """Run the next chunk of the slot's in-flight prefill; returns the
+        number of token positions computed (charged against the tick's
+        prefill budget)."""
+        task = self.prefill_tasks[slot]
+        req = task.req
+        toks = np.asarray(req.tokens, np.int64)
+        T = len(toks)
+        n = min(self.prefill_chunk, T - task.done)
+        Cb = self._bucket(n, cap=self.prefill_chunk)
+        batch = {"tokens": self._padded_prompt(toks[task.done:task.done + n],
+                                               Cb),
+                 "pos": jnp.asarray(task.done, jnp.int32),
+                 "length": jnp.asarray(n, jnp.int32)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(self.tables[slot][None])
+        else:
+            batch["slot"] = jnp.asarray(slot, jnp.int32)
+        self._traced.add(("prefill_chunk", Cb))
+        task.logits, self.cache = self._prefill_chunk(
+            self.params, self.cache, batch)
+        task.done += n
+        self.prefill_tokens_computed += n
+        self.prefill_tokens_padded += Cb - n
+        if self.paged and self.prefix_caching:
+            # publish fully-written prompt blocks as they complete, so a
+            # request admitted later this tick already hits them
+            self.pool.register_prefix(
+                toks[:task.done],
+                self.block_tables[slot].pages[:task.done // self.page_size])
+        if task.done >= T:  # prompt complete: promote to decoding
+            self.prefill_tasks[slot] = None
+            self._activate(slot, req, int(jnp.argmax(task.logits[0])))
+        return Cb
+
+    def _schedule_prefill(self):
+        """Spend this tick's prefill token budget: advance in-flight chunked
+        prefills and admit queued requests into free slots, oldest first.
+        Decode steps for already-running slots happen in the same tick, so
+        a long prompt can no longer stall them for its whole prefill."""
+        budget = self.prefill_budget
+        blocked = False  # paged admission failed this tick: stop admitting
+        while budget > 0:
+            progressed = False
+            # admit at most one request per round, then advance every
+            # in-flight prefill: a short prompt admitted behind a finished
+            # one sees its freshly registered prefix blocks (the admission
+            # lookup runs after the earlier prompt's chunks completed)
+            if not blocked and self.queue:
+                free = next((i for i in range(self.max_batch)
+                             if self.slots[i] is None
+                             and self.prefill_tasks[i] is None), None)
+                if free is not None:
+                    req = self.queue.popleft()
+                    if self._start_prefill(free, req):
+                        progressed = True
+                    else:
+                        blocked = True
+            for slot in range(self.max_batch):
+                if budget <= 0:
+                    break
+                if self.prefill_tasks[slot] is None:
+                    continue
+                budget -= self._advance_prefill(slot)
+                progressed = True
+            self._progress |= progressed
+            if not progressed:
+                return
+
     # ------------------------------------------------------------- public
     def submit(self, req: Request):
+        if len(req.tokens) > self.max_seq - 1:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.tokens)} tokens "
+                f"exceeds the engine's capacity — max_seq={self.max_seq} "
+                f"leaves room for at most {self.max_seq - 1} prompt tokens "
+                "plus one generated token; raise max_seq or truncate the "
+                "prompt")
+        if len(req.tokens) < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    def _activate(self, slot: int, req: Request, first_tok: int):
+        """Install an admitted request into its decode slot, honoring EOS
+        and the generation budget at admission: a request whose first
+        prefill-sampled token already ends it (eos, or max_new_tokens == 1)
+        finishes immediately instead of decoding its full budget."""
+        req.output.append(first_tok)
+        req.token_times.append(time.perf_counter())
+        if (req.max_new_tokens <= 1
+                or (self.eos_id is not None and first_tok == self.eos_id)):
+            req.done = True
+            self.finished.append(req)
+            if self.paged and self.block_tables[slot] is not None:
+                self.block_tables[slot].free()
+                self.block_tables[slot] = None
+                self.tables[slot] = -1
+            return
+        self.slots[slot] = req
+        self.pos[slot] = len(req.tokens)
+        self.budget[slot] = req.max_new_tokens - 1
+
     def _admit(self):
+        """Monolithic admission path (chunking disabled, or recurrent/
+        hybrid families whose state cannot be chunk-prefilled)."""
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
             admit = self._admit_paged if self.paged else self._admit_dense
-            if not admit(slot, req):
+            first = admit(slot, req)
+            if first is None:
+                self.queue.appendleft(req)
                 break  # out of pages: wait for running requests to finish
-            self.slots[slot] = req
-            self.pos[slot] = len(req.tokens)
-            self.budget[slot] = req.max_new_tokens - 1
+            self._progress = True
+            self._activate(slot, req, first)
 
     def step(self) -> int:
-        """One engine tick: admit + one batched decode step.
-        Returns number of active slots."""
-        self._admit()
+        """One engine tick: spend the prefill budget (chunked path) or
+        admit monolithically, then one batched decode step for every
+        fully-prefilled slot.  Returns the number of occupied slots."""
+        self._progress = False  # any admission/prefill advance this tick
+        if self.chunked:
+            self._schedule_prefill()
+        else:
+            self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
+        n_prefilling = sum(t is not None for t in self.prefill_tasks)
         if not active:
-            return 0
+            if n_prefilling:
+                self.ticks += 1
+            return n_prefilling
         tokens = np.zeros(self.max_batch, np.int32)
+        # slots without a decodable request (free, or still prefilling) are
+        # masked out of the decode step: dense writes land at the
+        # out-of-bounds position max_seq (XLA drops them), paged rows get a
+        # null block table, so a mid-prefill slot's cache is never touched
+        pos = np.full(self.max_batch, self.max_seq, np.int64)
         for i in active:
             tokens[i] = self.slots[i].output[-1]
+            pos[i] = self.pos[i]
         batch = {"tokens": jnp.asarray(tokens),
-                 "pos": jnp.asarray(self.pos, jnp.int32)}
+                 "pos": jnp.asarray(pos, jnp.int32)}
         if self.paged:
             for i in active:  # grow block tables across page boundaries
                 bt = self.block_tables[i]
                 if self.pos[i] >= bt.num_tokens_capacity():
                     bt.ensure_capacity(self.pos[i] + 1)
                     self.tables[i] = bt.as_row(self.max_blocks)
-            batch["block_tables"] = jnp.asarray(self.tables)
+            tables = np.full_like(self.tables, -1)
+            for i in active:
+                tables[i] = self.tables[i]
+            pos[pos >= self.max_seq] = 0  # clamp masked rows (null table)
+            batch["pos"] = jnp.asarray(pos, jnp.int32)
+            batch["block_tables"] = jnp.asarray(tables)
         logits, self.cache = self._step(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits, -1))
         self.ticks += 1
+        t_now = time.perf_counter()
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
             req.output.append(tok)
+            req.token_times.append(t_now)
             self.pos[i] += 1
             self.budget[i] -= 1
             if (self.budget[i] <= 0 or tok == self.eos_id
@@ -283,11 +565,18 @@ class ServingEngine:
                 req.done = True
                 self.finished.append(req)
                 self._free_slot(i)  # free slot/pages (continuous batching)
-        return len(active)
+        return len(active) + n_prefilling
 
-    def run_until_drained(self, max_ticks: int = 10_000):
-        while self.queue or any(s is not None for s in self.slots):
-            if self.step() == 0 and self.queue:
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          keep_finished: bool = False):
+        """Step until queue, prefill tasks and slots are all empty.
+
+        Returns the finished requests; ``keep_finished=True`` leaves them
+        on ``self.finished`` too (so ``latency_stats`` still sees them).
+        """
+        while (self.queue or any(s is not None for s in self.slots)
+               or any(t is not None for t in self.prefill_tasks)):
+            if self.step() == 0 and self.queue and not self._progress:
                 # nothing active yet admission failed: the head request can
                 # never fit (its worst case exceeds the whole pool)
                 head = self.queue[0]
@@ -296,6 +585,8 @@ class ServingEngine:
                     f"pages but the pool only has {self.pool.num_pages - 1}")
             if self.ticks > max_ticks:
                 raise RuntimeError("engine did not drain")
+        if keep_finished:
+            return list(self.finished)
         out, self.finished = self.finished, []
         return out
 
@@ -305,11 +596,43 @@ class ServingEngine:
         return sum(int(np.prod(v.shape)) * v.dtype.itemsize
                    for v in self.cache.values())
 
+    def prefill_trace_count(self) -> int:
+        """Distinct prefill-path shapes handed to XLA so far.  With
+        bucketing this is bounded by the bucket count (O(log max_seq));
+        without it every distinct prompt length is a fresh compile."""
+        return len(self._traced)
+
+    def jit_cache_sizes(self) -> dict:
+        """Actual XLA trace counts per jitted entry point (when the jax
+        version exposes them) — ground truth for the recompile-storm
+        regression test."""
+        out = {}
+        for name in ("_prefill", "_prefill_sfx", "_prefill_chunk", "_step"):
+            fn = getattr(self, name, None)
+            size = getattr(fn, "_cache_size", None)
+            if size is not None:
+                out[name] = size()
+        return out
+
+    def latency_stats(self) -> dict:
+        """Wall-clock TTFT / inter-token-latency percentiles (seconds) over
+        finished requests (call before ``run_until_drained`` pops them)."""
+        done = [r for r in self.finished if r.token_times]
+        ttft = [r.ttft_s() for r in done]
+        itl = [d for r in done for d in r.itl_s()]
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+        return {"n_requests": len(done),
+                "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+                "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95)}
+
     def stats(self) -> dict:
         out = {"ticks": self.ticks, "paged": self.paged,
-               "kv_cache_bytes": self.kv_cache_bytes()}
+               "kv_cache_bytes": self.kv_cache_bytes(),
+               "bucketed": self.bucketing, "chunked": self.chunked,
+               "prefill_trace_count": self.prefill_trace_count(),
+               "prefill_tokens_computed": self.prefill_tokens_computed,
+               "prefill_tokens_padded": self.prefill_tokens_padded}
         if self.paged:
             out.update(self.pool.stats(),
-                       prefill_tokens_computed=self.prefill_tokens_computed,
                        prefix_tokens_reused=self.prefix_tokens_reused)
         return out

@@ -222,6 +222,14 @@ class BlockTable:
     def page_of(self, position: int) -> int:
         return self.pages[position // self.pool.block_size]
 
+    def rows_for(self, positions) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized (page_ids, offsets) for an array of logical positions
+        — the host side of the K/V scatter path used by (chunked) prefill."""
+        positions = np.asarray(positions)
+        bs = self.pool.block_size
+        pages = np.asarray(self.pages, np.int32)[positions // bs]
+        return pages, (positions % bs).astype(np.int32)
+
     def slot_of(self, position: int) -> tuple[int, int]:
         return self.page_of(position), position % self.pool.block_size
 

@@ -28,9 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import logging
 from typing import Callable
 
 import numpy as np
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -112,7 +115,10 @@ class QLMIORouter:
         paged KV prefix cache, and ``prefill_pred(task, server) -> seconds``
         the prefill share of the MILP estimate; together they discount the
         latency of servers that already hold the conversation's prefix
-        (cost_model.latency_s's ``prefix_hit_rate`` term).
+        (cost_model.latency_s's ``prefix_hit_rate`` term).  Build
+        ``prefill_pred`` from ``cost_model.prefill_s(..., prefill_chunk=N)``
+        when the target server runs the bucketed/chunked prefill engine, so
+        the discount matches the step-function cost it actually pays.
         """
         self.servers = servers
         self.milp = milp_pred
@@ -159,7 +165,18 @@ class QLMIORouter:
             if self.health.healthy(self.now)[a]:
                 return a
         u = self._score(task, t_hat)
-        return int(np.argmax(u))
+        best = int(np.argmax(u))
+        if not np.isfinite(u[best]):
+            # every server is in cooldown: argmax over all -inf would
+            # silently pick server 0 — dispatch to the soonest-recovering
+            # server instead (min dead_until) and say so
+            best = int(np.argmin(self.health.dead_until))
+            logger.warning(
+                "task %s: all %d servers unhealthy; falling back to "
+                "soonest-recovering server %d (%s, recovers at t=%.1fs)",
+                task, len(self.servers), best, self.servers[best].name,
+                float(self.health.dead_until[best]))
+        return best
 
     # -------------------------------------------------------------- dispatch
     def _drain_queues(self):
@@ -180,14 +197,21 @@ class QLMIORouter:
         predicted = t_eff[s] + self.queue_s[s]
         hedged = False
         if lat > self.hedge_factor * max(predicted, 0.25):
-            # straggler: hedge to the next-best healthy server
+            # straggler: hedge to the next-best healthy server.  Both
+            # servers executed the task, so the loser's work is charged to
+            # its queue_s too — only the winner's latency reaches the
+            # caller, but backlog accounting must cover both dispatches.
             u = self._score(task, t_eff)
             u[s] = -np.inf
             s2 = int(np.argmax(u))
-            lat2, ok2 = self.servers[s2].execute(task)
-            if self.queue_s[s2] + lat2 < self.queue_s[s] + lat:
-                self.health.record(s, lat, False, self.now)
-                s, lat, ok, hedged = s2, lat2, ok2, True
+            if s2 != s and np.isfinite(u[s2]):  # a healthy backup exists
+                lat2, ok2 = self.servers[s2].execute(task)
+                if self.queue_s[s2] + lat2 < self.queue_s[s] + lat:
+                    self.health.record(s, lat, False, self.now)
+                    self.queue_s[s] += lat  # losing original did the work
+                    s, lat, ok, hedged = s2, lat2, ok2, True
+                else:
+                    self.queue_s[s2] += lat2  # losing hedge did the work
         total = lat + self.queue_s[s]
         self.queue_s[s] += lat
         self.health.record(s, lat, ok, self.now)

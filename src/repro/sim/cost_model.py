@@ -73,29 +73,71 @@ _PAYLOAD = 300e3  # image + prompt bytes
 _EFF = 0.35  # achieved fraction of peak
 
 
+_PREFILL_MIN_BUCKET = 16  # mirrors ServingEngine's min_bucket default
+
+
 def expected_out_tokens(model: ModelProfile, difficulty) -> np.ndarray:
     gap = np.maximum(0.15, 0.75 + difficulty - model.capability)
     return _COT_BASE + _COT_SCALE * gap ** 2
 
 
-def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens):
-    """Prefill-only roofline term (the part a prefix-cache hit elides)."""
-    return 2.0 * model.n_active * np.asarray(prompt_tokens) / (
-        device.flops * _EFF)
+def bucketed_tokens(n, minimum: int = _PREFILL_MIN_BUCKET) -> np.ndarray:
+    """Power-of-two shape bucket a prompt of ``n`` tokens is padded to by
+    the serving engine's anti-recompile-storm prefill path."""
+    n = np.maximum(np.asarray(n, float), 1.0)
+    return np.maximum(2.0 ** np.ceil(np.log2(n)), float(minimum))
+
+
+def chunked_prefill_tokens(prompt_tokens, prefill_chunk: int,
+                           minimum: int = _PREFILL_MIN_BUCKET) -> np.ndarray:
+    """Token positions the engine's bucketed + chunked prefill actually
+    computes for a prompt: full ``prefill_chunk``-sized chunks plus the
+    remainder padded up to its power-of-two bucket.  With chunking off
+    (``prefill_chunk == 0``) the whole prompt is one bucket.  This is the
+    term the router's latency estimates use so they track the real engine
+    (ServingEngine ``prefill_chunk`` / ``bucket_prompts`` knobs).
+    """
+    t = np.asarray(prompt_tokens, float)
+    if not prefill_chunk:
+        return bucketed_tokens(t, minimum)
+    full = np.floor(t / prefill_chunk) * prefill_chunk
+    rem = t - full
+    return full + np.where(rem > 0,
+                           bucketed_tokens(np.maximum(rem, 1.0), minimum),
+                           0.0)
+
+
+def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
+              prefill_chunk: int | None = None):
+    """Prefill-only roofline term (the part a prefix-cache hit elides).
+
+    ``prefill_chunk`` (None = legacy smooth model) switches to the serving
+    engine's bucketed/chunked token count, whose padding makes prefill a
+    step function of prompt length rather than a straight line.
+    """
+    tokens = (np.asarray(prompt_tokens)
+              if prefill_chunk is None
+              else chunked_prefill_tokens(prompt_tokens, prefill_chunk))
+    return 2.0 * model.n_active * tokens / (device.flops * _EFF)
 
 
 def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
               difficulty, rng: np.random.Generator | None = None,
-              prefix_hit_rate=0.0):
+              prefix_hit_rate=0.0, prefill_chunk: int | None = None):
     """Roofline latency; lognormal noise if rng given.
 
     ``prefix_hit_rate`` is the expected fraction of prompt tokens already
     resident in the server's paged KV prefix cache (repro/serving/kv_cache):
     hit tokens skip prefill compute entirely, so the prefill term scales by
     ``1 - hit_rate``.  Decode and transmission are unaffected.
+
+    ``prefill_chunk`` (None = legacy smooth model) models the serving
+    engine's bucketed + chunked prefill instead: compute covers the padded
+    bucket shapes, so the estimate tracks what the engine actually runs.
     """
     hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
-    prefill = prefill_s(device, model, prompt_tokens) * (1.0 - hit)
+    prefill = prefill_s(device, model, prompt_tokens,
+                        prefill_chunk=prefill_chunk) * (1.0 - hit)
     out_tok = expected_out_tokens(model, np.asarray(difficulty))
     if rng is not None:
         out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))

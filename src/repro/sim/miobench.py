@@ -53,7 +53,12 @@ class MIOBench:
                 }
 
 
-def generate(seed: int = 0, n_tasks: int | None = None) -> MIOBench:
+def generate(seed: int = 0, n_tasks: int | None = None,
+             prefill_chunk: int | None = None) -> MIOBench:
+    """``prefill_chunk`` (None = legacy smooth latency model) synthesizes
+    latencies with the serving engine's bucketed/chunked prefill term, so
+    predictors trained on the bench match the real engine's step-function
+    prefill cost (see cost_model.chunked_prefill_tokens)."""
     tasks = make_taskset(n_tasks or 3377, seed)
     rng = np.random.default_rng(seed + 1)
     aff = cm.category_affinity(len(CATEGORIES), len(SERVER_CLASSES))
@@ -65,7 +70,8 @@ def generate(seed: int = 0, n_tasks: int | None = None) -> MIOBench:
     for c, (dev, mdl) in enumerate(SERVER_CLASSES):
         device, model = cm.DEVICES[dev], cm.MODELS[mdl]
         lat[:, c] = cm.latency_s(device, model, tasks.text_len,
-                                 tasks.difficulty, rng)
+                                 tasks.difficulty, rng,
+                                 prefill_chunk=prefill_chunk)
         p = cm.success_prob(model, tasks.difficulty,
                             aff[tasks.category, c])
         ok = rng.random(n) < p

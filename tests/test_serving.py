@@ -129,6 +129,41 @@ def test_router_prefers_server_holding_prefix():
     assert base.route(0) == 0
 
 
+def test_router_all_unhealthy_falls_back_to_soonest_recovering():
+    """Regression: with every server in cooldown the -inf scores made
+    np.argmax silently dispatch to server 0; the router must pick the
+    soonest-recovering server instead."""
+    servers = [_mk_server("a", 1.0), _mk_server("b", 1.0)]
+    router = QLMIORouter(servers, lambda t, s: 1.0, lambda t, s: 0.9)
+    router.health.dead_until[:] = [500.0, 100.0]  # both in cooldown
+    router.now = 0.0
+    assert router.route(0) == 1  # b recovers first, not argmax's server 0
+    router.health.dead_until[:] = [80.0, 300.0]
+    assert router.route(0) == 0
+
+
+def test_router_hedge_charges_losing_server():
+    """Regression: hedged dispatch never charged the losing server's work
+    to its queue_s — both servers executed the task, so both backlogs
+    must grow."""
+    # hedge wins: the original (slow) server still did 50 s of work
+    servers = [_mk_server("slow", 50.0), _mk_server("backup", 1.0)]
+    router = QLMIORouter(servers, lambda t, s: [0.5, 5.0][s],
+                         lambda t, s: 0.9, hedge_factor=2.0)
+    rec = router.dispatch(0)
+    assert rec["hedged"] and rec["server"] == 1
+    assert router.queue_s[0] >= 50.0  # loser charged
+    assert router.queue_s[1] >= 1.0  # winner charged as before
+    # hedge loses: the backup still did its work
+    servers = [_mk_server("jittery", 30.0), _mk_server("busy", 45.0)]
+    router = QLMIORouter(servers, lambda t, s: [0.5, 5.0][s],
+                         lambda t, s: 0.9, hedge_factor=2.0)
+    rec = router.dispatch(0)
+    assert not rec["hedged"] and rec["server"] == 0
+    assert router.queue_s[0] >= 30.0
+    assert router.queue_s[1] >= 45.0  # losing hedge charged
+
+
 def test_router_elastic_scaling():
     servers = [_mk_server("a", 5.0)]
     router = QLMIORouter(servers, lambda t, s: 5.0, lambda t, s: 0.9)
