@@ -3,7 +3,6 @@ in the 15-server / 30-user configuration."""
 import numpy as np
 
 import json
-import os
 
 from benchmarks.common import budget, emit, trained_predictors, world
 

@@ -1,10 +1,7 @@
 """Fig. 9: ablation — QLMIO without MILP / without MGQP / without both."""
-import dataclasses
 
-import numpy as np
 
 import json
-import os
 
 from benchmarks.common import budget, emit, trained_predictors, world
 

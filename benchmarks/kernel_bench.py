@@ -7,8 +7,13 @@ numbers the §Perf iterations use.
 
 ``python benchmarks/kernel_bench.py serving`` runs only the serving-engine
 prefill benchmark (mixed-length workload, TTFT/ITL percentiles + XLA
-compile counts) — the CI smoke entry.
+compile counts); ``... serving paged_kv`` adds the analytic paged-KV
+memory/throughput section — the CI smoke entry.  ``--json PATH`` writes
+every section that ran to one JSON file, the input of the CI benchmark
+regression gate (``scripts/check_bench.py`` vs. ``benchmarks/
+baseline.json``).
 """
+import json
 import sys
 import time
 
@@ -82,6 +87,37 @@ def serving_prefill_bench():
     return out
 
 
+def paged_kv_bench():
+    """KV memory footprint + decode throughput (analytic, deterministic):
+    dense pads every slot to max_seq while the paged pool sizes to the
+    workload's live tokens.  Workload: 8 slots, lengths 0.5-8k, max_seq
+    8k, L=32 layers of the flash-decode shape used in ``run``."""
+    H, Hkv, D, bs_pg = 8, 2, 128, 64
+    L, max_seq = 32, 8192
+    lens = [512, 1024, 1536, 2048, 3072, 4096, 6144, 8192]
+    tok_bytes = Hkv * D * 2 * 2 * L  # K+V bf16, all layers
+    dense_bytes = len(lens) * max_seq * tok_bytes
+    paged_pages = sum(-(-n // bs_pg) for n in lens)
+    paged_bytes = (1 + paged_pages) * bs_pg * tok_bytes
+    dense_step_s = _roof(2 * 2 * H * D * sum(lens),
+                         sum(max_seq for _ in lens) * Hkv * D * 2 * 2)
+    paged_step_s = _roof(2 * 2 * H * D * sum(lens),
+                         sum(lens) * Hkv * D * 2 * 2)
+    print("paged_kv,metric,dense,paged,ratio")
+    print(f"paged_kv,kv_bytes_per_layer_stack,{dense_bytes},{paged_bytes},"
+          f"{dense_bytes / paged_bytes:.2f}")
+    print(f"paged_kv,decode_roofline_tok_s,{len(lens) / dense_step_s:.0f},"
+          f"{len(lens) / paged_step_s:.0f},"
+          f"{dense_step_s / paged_step_s:.2f}")
+    return emit("paged_kv_memory", {
+        "workload_lens": lens, "max_seq": max_seq, "block_size": bs_pg,
+        "dense_kv_bytes": dense_bytes, "paged_kv_bytes": paged_bytes,
+        "memory_ratio": dense_bytes / paged_bytes,
+        "dense_decode_tok_s": len(lens) / dense_step_s,
+        "paged_decode_tok_s": len(lens) / paged_step_s,
+    })
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
@@ -137,33 +173,7 @@ def run():
     rows.append(("paged_decode", f"B{B}xS{S2}xH{H}xbs{bs_pg}", err,
                  paged_roof, time.time() - t0))
 
-    # KV memory footprint + decode throughput: dense pads every slot to
-    # max_seq while the paged pool sizes to the workload's live tokens.
-    # Workload: 8 slots, lengths 0.5-8k, max_seq 8k, L=32 layers of the
-    # flash-decode shape above.
-    L, max_seq = 32, S2
-    lens = [512, 1024, 1536, 2048, 3072, 4096, 6144, 8192]
-    tok_bytes = Hkv * D * 2 * 2 * L  # K+V bf16, all layers
-    dense_bytes = len(lens) * max_seq * tok_bytes
-    paged_pages = sum(-(-n // bs_pg) for n in lens)
-    paged_bytes = (1 + paged_pages) * bs_pg * tok_bytes
-    dense_step_s = _roof(2 * 2 * H * D * sum(lens),
-                         sum(max_seq for _ in lens) * Hkv * D * 2 * 2)
-    paged_step_s = _roof(2 * 2 * H * D * sum(lens),
-                         sum(lens) * Hkv * D * 2 * 2)
-    print("paged_kv,metric,dense,paged,ratio")
-    print(f"paged_kv,kv_bytes_per_layer_stack,{dense_bytes},{paged_bytes},"
-          f"{dense_bytes / paged_bytes:.2f}")
-    print(f"paged_kv,decode_roofline_tok_s,{len(lens) / dense_step_s:.0f},"
-          f"{len(lens) / paged_step_s:.0f},"
-          f"{dense_step_s / paged_step_s:.2f}")
-    emit("paged_kv_memory", {
-        "workload_lens": lens, "max_seq": max_seq, "block_size": bs_pg,
-        "dense_kv_bytes": dense_bytes, "paged_kv_bytes": paged_bytes,
-        "memory_ratio": dense_bytes / paged_bytes,
-        "dense_decode_tok_s": len(lens) / dense_step_s,
-        "paged_decode_tok_s": len(lens) / paged_step_s,
-    })
+    paged = paged_kv_bench()
 
     # SSD scan
     b2, S3, h2, p2, n2 = 1, 1024, 8, 64, 64
@@ -213,12 +223,43 @@ def run():
     emit("kernel_bench", {"rows": [
         {"name": n, "workload": w, "err": e, "tpu_roofline_us": r_ * 1e6,
          "cpu_wall_s": wl} for n, w, e, r_, wl in rows]})
-    serving_prefill_bench()
-    return rows
+    serving = serving_prefill_bench()
+    return {"kernels": {n: {"workload": w, "err": e,
+                            "tpu_roofline_us": r_ * 1e6, "cpu_wall_s": wl}
+                        for n, w, e, r_, wl in rows},
+            "paged_kv": paged, "serving": serving}
+
+
+def main(argv: "list[str]") -> dict:
+    """CLI: positional section names (``serving``, ``paged_kv``; none =
+    full kernel sweep) + optional ``--json PATH`` writing every section
+    that ran to one file for ``scripts/check_bench.py``."""
+    args = list(argv)
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            raise SystemExit("kernel_bench: --json needs a file path")
+        json_path = args[i + 1]
+        del args[i:i + 2]
+    sections = [a for a in args if not a.startswith("-")]
+    unknown = [s for s in sections if s not in ("serving", "paged_kv")]
+    if unknown:
+        raise SystemExit(f"kernel_bench: unknown section(s) {unknown}; "
+                         "available: serving, paged_kv (none = full sweep)")
+    out = {}
+    if "paged_kv" in sections:
+        out["paged_kv"] = paged_kv_bench()
+    if "serving" in sections:
+        out["serving"] = serving_prefill_bench()
+    if not sections:
+        out = run()  # full sweep: kernels + paged_kv + serving
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"kernel_bench: wrote {json_path}")
+    return out
 
 
 if __name__ == "__main__":
-    if "serving" in sys.argv[1:]:
-        serving_prefill_bench()
-    else:
-        run()
+    main(sys.argv[1:])

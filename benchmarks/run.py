@@ -18,11 +18,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (fig1_device_disparity, fig5_milp, fig6_mgqp,
                             fig7_qlmio_convergence, fig8_comparison,
-                            fig9_ablation, kernel_bench, miobench_stats,
-                            roofline)
+                            fig9_ablation, fig10_continuum_replay,
+                            kernel_bench, miobench_stats, roofline)
     budget = os.environ.get("BENCH_BUDGET", "smoke")
     print(f"# benchmarks (budget={budget}) — sections: miobench, fig1, "
-          f"fig5, fig6, fig7, fig8, fig9, kernels, roofline", flush=True)
+          f"fig5, fig6, fig7, fig8, fig9, fig10, kernels, roofline",
+          flush=True)
     sections = [
         ("miobench_stats", miobench_stats.run),
         ("fig1", fig1_device_disparity.run),
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig7", fig7_qlmio_convergence.run),
         ("fig8", fig8_comparison.run),
         ("fig9", fig9_ablation.run),
+        ("fig10", fig10_continuum_replay.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
     ]

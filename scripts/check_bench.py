@@ -1,0 +1,124 @@
+"""CI benchmark-regression gate.
+
+Compares a ``kernel_bench.py --json`` output against the checked-in
+``benchmarks/baseline.json`` with per-metric tolerance and fails (exit 1)
+on regression, so serving-latency and throughput numbers cannot rot
+silently.
+
+Usage:
+    python benchmarks/kernel_bench.py serving paged_kv --json bench.json
+    python scripts/check_bench.py bench.json
+    python scripts/check_bench.py bench.json --update   # refresh baseline
+
+Baseline schema — one entry per gated metric, addressed by a dotted path
+into the bench JSON:
+
+    "serving.chunked.ttft_p95_s": {
+        "value": 1.43,        # baseline measurement
+        "better": "lower",    # which direction is an improvement
+        "max_ratio": 3.0,     # regression when worse by > this factor
+        "max_abs": 0.0        # ... or by > this absolute slack
+    }
+
+A metric regresses only when it is worse than ``value`` by more than
+*both* slacks (ratio for scale-free drift, abs for near-zero baselines).
+Wall-clock metrics get generous ratios (shared CI runners are noisy);
+deterministic metrics (XLA trace counts, roofline throughput) are tight.
+``--update`` rewrites every ``value`` from the current measurement and
+keeps the tolerances, for intentional performance-characteristic changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks", "baseline.json")
+
+
+def lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check_metric(name: str, spec: dict, measured) -> "str | None":
+    """None if within tolerance, else a human-readable failure line."""
+    if measured is None:
+        return f"{name}: missing from the bench JSON"
+    base = float(spec["value"])
+    new = float(measured)
+    better = spec.get("better", "lower")
+    max_ratio = float(spec.get("max_ratio", 1.0))
+    max_abs = float(spec.get("max_abs", 0.0))
+    if better == "lower":
+        limit = max(base * max_ratio, base + max_abs)
+        if new > limit:
+            return (f"{name}: {new:.4g} exceeds baseline {base:.4g} "
+                    f"(limit {limit:.4g})")
+    elif better == "higher":
+        limit = min(base / max_ratio, base - max_abs)
+        if new < limit:
+            return (f"{name}: {new:.4g} below baseline {base:.4g} "
+                    f"(limit {limit:.4g})")
+    else:
+        raise ValueError(f"{name}: unknown direction {better!r}")
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench_json", help="output of kernel_bench.py --json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline values from this measurement")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    metrics = baseline["metrics"]
+    if args.update:
+        missing = []
+        for name, spec in metrics.items():
+            measured = lookup(bench, name)
+            if measured is None:
+                missing.append(name)
+            else:
+                spec["value"] = float(measured)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+            f.write("\n")
+        print(f"check_bench: baseline updated ({len(metrics)} metrics)"
+              + (f"; NOT measured: {missing}" if missing else ""))
+        return 1 if missing else 0
+
+    failures = []
+    for name, spec in metrics.items():
+        err = check_metric(name, spec, lookup(bench, name))
+        status = "FAIL" if err else "ok"
+        measured = lookup(bench, name)
+        shown = "missing" if measured is None else f"{float(measured):.4g}"
+        print(f"check_bench,{status},{name},measured={shown},"
+              f"baseline={spec['value']:.4g}")
+        if err:
+            failures.append(err)
+    if failures:
+        print(f"check_bench: {len(failures)} regression(s):",
+              file=sys.stderr)
+        for err in failures:
+            print(f"  {err}", file=sys.stderr)
+        return 1
+    print(f"check_bench: all {len(metrics)} metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,20 +1,38 @@
 #!/usr/bin/env bash
-# CI entry point: install deps, run the tier-1 suite, then the decode
-# consistency smoke test.  Mirrors .github/workflows/ci.yml so the same
-# commands run locally: bash scripts/ci.sh
+# CI entry point: install deps, run the tier-1 suite, the decode smoke
+# test, the continuum replay smoke, and the benchmark regression gate.
+# Mirrors .github/workflows/ci.yml so the same commands run locally:
+#   bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
     python -m pip install --upgrade pip
-    python -m pip install "jax[cpu]" numpy pytest hypothesis msgpack zstandard
+    python -m pip install "jax[cpu]" numpy pytest pytest-timeout hypothesis \
+        msgpack zstandard
 fi
 
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# lint (same commands as the CI lint job; skipped when ruff is absent)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+    ruff format --check .
+else
+    echo "ci.sh: ruff not installed; skipping lint (CI runs it)"
+fi
+
 python -m pytest -x -q
 python scripts/smoke_decode.py
-# serving prefill smoke: mixed-length TTFT/ITL + compile-count rows
-# (bucketed+chunked scheduler vs. legacy recompile-storm path)
-PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py serving
+
+# serving prefill smoke + benchmark regression gate: TTFT/ITL p95, prefill
+# trace counts and paged-decode throughput vs. benchmarks/baseline.json
+mkdir -p results
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py \
+    serving paged_kv --json results/bench.json
+python scripts/check_bench.py results/bench.json
+
+# continuum replay smoke: QLMIO over real ServingEngines must beat the
+# all-cloud baseline on mean e2e latency at a matching completion rate
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig10_continuum_replay.py

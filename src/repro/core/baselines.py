@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import qlmio as Q
 from repro.core.d3qn import qnet_spec, q_values
 from repro.nn.spec import init_params
-from repro.sim.cemllm import Servers, greedy_latencies, run_policy
+from repro.sim.cemllm import Servers, greedy_latencies
 from repro.sim.miobench import MIOBench, SERVER_CLASSES
 
 

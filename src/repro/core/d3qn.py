@@ -11,7 +11,6 @@ the standard dueling estimator and the cited D3QN reference; see README.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

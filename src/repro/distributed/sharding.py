@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 from repro.nn.spec import TensorSpec, tree_map_specs
 
 Tree = Any

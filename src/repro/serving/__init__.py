@@ -5,3 +5,10 @@ from repro.serving.router import (  # noqa: F401
     ServerHandle,
     SimulatedServer,
 )
+
+__all__ = ["ServingEngine", "HealthTracker", "QLMIORouter", "ServerHandle",
+           "SimulatedServer"]
+
+# repro.serving.cluster (the continuum replay harness) is imported lazily
+# by its users: it pulls in model building, which this package's light
+# consumers (router-only tests, cost-model sims) should not pay for.

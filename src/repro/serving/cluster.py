@@ -1,0 +1,380 @@
+"""Discrete-event cloud-edge continuum replay harness.
+
+The offloading half of this repo (QLMIO router, CEMLLM-Sim episodes) used
+to execute tasks against closed-form cost-model stubs; the serving half
+(paged-KV + chunked-prefill ``ServingEngine``) was never in the decision
+loop.  This module joins them: each ``EngineHandle`` wraps a **live**
+``ServingEngine`` (small/fast reduced config for edge nodes, larger config
+for the cloud tier) behind the network link of a quarantined
+``DeviceProfile``, and a ``Cluster`` replays MIOBench arrival traces
+against the fleet under a shared **virtual clock**:
+
+  * the policy (QLMIO scoring, MILP/MGQP/greedy/all-cloud baselines via
+    ``run_policy``) picks a server per task;
+  * the harness ``submit()``s the request to that server's engine with the
+    uplink delay applied, then advances every engine tick-by-tick;
+  * one engine tick costs ``decode_tick_s`` virtual seconds (the roofline
+    per-token decode time of the profiled hardware) plus
+    ``prefill_tok_s`` per prompt token (computed + padding) the tick's
+    chunked prefill actually ran — the engine generates *real* tokens
+    while the clock charges the *profiled* device;
+  * TTFT / ITL / e2e come from ``ServingEngine.latency_stats()`` in
+    virtual-clock seconds (the engine's ``clock`` hook), and quality comes
+    from the MIOBench success predictors, replacing
+    ``SimulatedServer._execute``'s closed-form latency.
+
+``EngineBackend`` plugs the harness into ``sim.cemllm.Episode`` with the
+same interface as ``CostModelBackend``: dispatch-time estimates are the
+cost-model numbers (so a deterministic policy takes identical decisions
+under either backend), and ``drain()`` patches the episode records with
+measured latencies once every engine has drained.
+"""
+from __future__ import annotations
+
+import heapq
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import ServerHandle
+from repro.sim import cost_model as cm
+from repro.sim.cemllm import CostModelBackend
+from repro.sim.miobench import SERVER_CLASSES
+
+# live-engine arch per MIOBench server class (SERVER_CLASSES order):
+# edge tiers run the small/fast config, the cloud tier a larger one.
+CLASS_ARCHS = ["qwen2-0.5b", "qwen2-0.5b", "llama3.2-3b"]
+
+
+class EngineHandle(ServerHandle):
+    """One continuum server: a live ``ServingEngine`` under a virtual clock.
+
+    The engine's ``clock`` hook reads ``self.vtime``, so every request
+    timestamp (``t_submit`` / ``token_times``) — and therefore
+    ``latency_stats()`` — is in virtual seconds.  Doubles as a plain
+    ``ServerHandle``: ``execute`` runs one task synchronously (legacy
+    router path) and ``load`` reports live queue depth, in-flight prefill
+    tokens and estimated drain time for the router's scoring.
+    """
+
+    def __init__(self, name: str, arch: str, device: cm.DeviceProfile,
+                 profile: cm.ModelProfile, *, is_cloud: bool = False,
+                 seed: int = 0, max_batch: int = 2, max_seq: int = 96,
+                 time_scale: float = 1.0, payload_bytes: float = 300e3,
+                 fail: bool = False, **engine_kw):
+        cfg = reduced(get_config(arch))
+        self.cfg = cfg
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        self.vtime = 0.0
+        self.engine = ServingEngine(model, params, max_batch=max_batch,
+                                    max_seq=max_seq,
+                                    clock=lambda: self.vtime, **engine_kw)
+        self.device = device
+        self.profile = profile
+        eff = device.flops * cm._EFF
+        bw = device.mem_bw * cm._EFF
+        self.decode_tick_s = (time_scale * profile.n_active
+                              * profile.bytes_per_param / bw)
+        self.prefill_tok_s = time_scale * 2.0 * profile.n_active / eff
+        self.link_s = payload_bytes / device.net_bw + device.rtt  # round trip
+        self.fail = fail
+        self.pending: list = []  # min-heap of (t_ready, seq, Request)
+        self._seq = 0
+        super().__init__(name=name,
+                         model_id=cm.MODEL_IDS.index(profile.name),
+                         device_id=cm.DEVICE_IDS.index(device.name),
+                         is_cloud=is_cloud, execute=self._execute_sync,
+                         load=self._load)
+
+    # ------------------------------------------------------- network link
+    def uplink_s(self) -> float:
+        return self.link_s / 2
+
+    def downlink_s(self) -> float:
+        return self.link_s / 2
+
+    # ---------------------------------------------------- virtual stepping
+    def enqueue(self, req: Request, t_ready: float):
+        """Queue a request to reach this server at virtual time t_ready."""
+        heapq.heappush(self.pending, (t_ready, self._seq, req))
+        self._seq += 1
+
+    def busy(self) -> bool:
+        return self.engine.busy()
+
+    def _admit_ready(self):
+        while self.pending and self.pending[0][0] <= self.vtime + 1e-12:
+            _, _, req = heapq.heappop(self.pending)
+            self.engine.submit(req)  # t_submit stamps self.vtime
+
+    def advance_to(self, t: float):
+        """Run whole engine ticks until the virtual clock reaches ``t``.
+
+        A tick is charged its dynamic cost (decode step + prefill tokens
+        it computed), so the final tick may overshoot ``t`` by less than
+        one tick.  An idle engine fast-forwards to its next arrival (or to
+        ``t``) without burning host CPU; a failed server burns the time
+        without serving anything (its requests time out).
+        """
+        while True:
+            self._admit_ready()
+            if self.vtime >= t - 1e-12:
+                return
+            if self.fail:
+                self.vtime = t
+                return
+            if not self.busy():
+                nxt = self.pending[0][0] if self.pending else t
+                if nxt >= t - 1e-12:  # nothing to do before t
+                    self.vtime = t
+                    return
+                self.vtime = max(self.vtime, nxt)
+                continue
+            e = self.engine
+            p0 = e.prefill_tokens_computed + e.prefill_tokens_padded
+            e.step()
+            dp = e.prefill_tokens_computed + e.prefill_tokens_padded - p0
+            self.vtime += self.decode_tick_s + dp * self.prefill_tok_s
+
+    # ------------------------------------------------------------- probes
+    def _load(self) -> dict:
+        """Live congestion for the router's ``_effective_latency``: queued
+        + running request count, prompt tokens not yet in any KV cache,
+        and the estimated virtual seconds to drain all of it."""
+        e = self.engine
+        waiting = list(e.queue) + [r for _, _, r in self.pending]
+        active = [r for r in e.slots if r is not None]
+        tasks = [t for t in e.prefill_tasks if t is not None]
+        inflight = (sum(len(t.req.tokens) - t.done for t in tasks)
+                    + sum(len(r.tokens) for r in waiting))
+        decode_ticks = max((int(e.budget[i]) for i, r in enumerate(e.slots)
+                            if r is not None), default=0)
+        decode_ticks += -(-sum(r.max_new_tokens for r in waiting)
+                          // max(e.max_batch, 1))
+        backlog = (inflight * self.prefill_tok_s
+                   + decode_ticks * self.decode_tick_s)
+        return {"queue_depth": len(waiting) + len(active) + len(tasks),
+                "inflight_prefill_tokens": int(inflight),
+                "backlog_s": float(backlog)}
+
+    def _execute_sync(self, task: int) -> "tuple[float, bool]":
+        """Legacy ``ServerHandle.execute``: run one task to completion on
+        this engine alone; returns virtual seconds including the link."""
+        if self.fail:
+            return 4 * cm.TIMEOUT_S, False
+        rng = np.random.default_rng((task, self.model_id, 7))
+        prompt = rng.integers(0, self.cfg.vocab, 16).astype(np.int32)
+        req = Request(-1 - task, prompt, max_new_tokens=6)
+        t0 = self.vtime
+        self.enqueue(req, self.vtime + self.uplink_s())
+        deadline = t0 + 4 * cm.TIMEOUT_S
+        stride = self.uplink_s() + 8 * self.decode_tick_s
+        while not req.done and self.vtime < deadline:
+            self.advance_to(self.vtime + stride)
+        return self.vtime - t0 + self.downlink_s(), req.done
+
+
+class Cluster:
+    """Shared-virtual-clock harness over a list of ``EngineHandle``s.
+
+    ``submit`` routes a request to a server; ``advance_to`` moves every
+    engine to a common virtual time (arrival ordering is respected via the
+    per-handle pending heaps); ``drain`` runs all engines until every
+    submitted request finished or the timeout horizon passed; ``collect``
+    returns the measured per-request records.
+    """
+
+    def __init__(self, handles: "list[EngineHandle]",
+                 timeout_s: float = cm.TIMEOUT_S):
+        self.handles = handles
+        self.timeout_s = timeout_s
+        self.t = 0.0
+        self.records: dict[int, dict] = {}
+        self._uid = 0
+
+    def submit(self, server: int, task: int, tokens, max_new_tokens: int,
+               t_arrival: float, quality_ok: bool = True) -> int:
+        """Dispatch one task to ``server`` at virtual ``t_arrival``; the
+        request reaches the engine after the uplink delay.  ``quality_ok``
+        is the success-predictor verdict for (task, server) — generated
+        tokens are real but random, so answer quality is judged by the
+        predictor, as in the sim."""
+        h = self.handles[server]
+        self._uid += 1
+        req = Request(self._uid, np.asarray(tokens, np.int32),
+                      max_new_tokens=int(max_new_tokens))
+        h.enqueue(req, t_arrival + h.uplink_s())
+        self.records[self._uid] = {"uid": self._uid, "task": task,
+                                   "server": server, "t_arrival": t_arrival,
+                                   "req": req, "quality_ok": bool(quality_ok)}
+        return self._uid
+
+    def busy(self) -> bool:
+        return any(h.busy() or h.pending for h in self.handles)
+
+    def advance_to(self, t: float):
+        if t <= self.t:
+            return
+        for h in self.handles:
+            h.advance_to(t)
+        self.t = t
+
+    def drain(self, max_virtual_s: float | None = None):
+        """Advance every engine until idle (or the deadline, for failed /
+        wedged servers).  Idle engines fast-forward, so this is cheap.
+        Work still queued at the deadline — a failed server's requests, or
+        backlog beyond the timeout horizon — can never complete inside it,
+        so it is dropped here: ``collect()`` reports those requests as
+        timeouts and the cluster stays reusable (``reset()``-able)."""
+        deadline = self.t + (2 * self.timeout_s if max_virtual_s is None
+                             else max_virtual_s)
+        for h in self.handles:
+            h.advance_to(deadline)
+            h.pending.clear()
+            h.engine.queue.clear()
+        self.t = deadline
+
+    def collect(self) -> "list[dict]":
+        """Measured per-request records (virtual seconds, links included).
+        A request that never completed (failed server, drain deadline)
+        counts as a timeout, like the sim's failure injection."""
+        out = []
+        for uid in sorted(self.records):
+            rec = self.records[uid]
+            req, h = rec["req"], self.handles[rec["server"]]
+            if req.done and req.token_times:
+                down = h.downlink_s()
+                e2e = req.token_times[-1] + down - rec["t_arrival"]
+                ttft = req.token_times[0] + down - rec["t_arrival"]
+                timeout = e2e > self.timeout_s
+                success = rec["quality_ok"] and not timeout
+                service = req.e2e_s()
+            else:
+                e2e = ttft = 4 * self.timeout_s
+                timeout, success, service = True, False, 0.0
+            out.append({"uid": uid, "task": rec["task"],
+                        "server": rec["server"], "ttft_s": float(ttft),
+                        "e2e_s": float(e2e), "service_s": float(service),
+                        "timeout": bool(timeout), "success": bool(success),
+                        "n_tokens": len(req.output)})
+        return out
+
+    def reset(self):
+        """Rewind the virtual clock for a fresh replay on warm engines
+        (keeps params and XLA caches — the expensive part)."""
+        for h in self.handles:
+            if h.busy() or h.pending:
+                raise RuntimeError("reset() needs a drained cluster")
+            h.vtime = 0.0
+            h.engine.finished.clear()
+            h.engine.reset_prefix_cache()  # replays must be independent
+        self.t = 0.0
+        self.records = {}
+        self._uid = 0  # uids restart so replays compare bit-identically
+
+    def latency_stats(self) -> dict:
+        """Per-handle engine stats (virtual-clock seconds)."""
+        return {h.name: h.engine.latency_stats() for h in self.handles}
+
+
+class EngineBackend:
+    """``Episode`` execution backend over a live ``Cluster`` (same
+    interface as ``sim.cemllm.CostModelBackend``).
+
+    ``execute`` returns the cost-model estimate — backend parity: a
+    deterministic policy sees exactly the observations it would under the
+    default backend — while the real request is submitted to the chosen
+    engine at the task's virtual arrival time; the cluster then advances
+    to the next arrival, so execution pipelines across decisions.
+    ``drain()`` finishes every engine and patches the registered episode
+    records with measured TTFT/e2e latency, timeout, and success.
+    """
+
+    def __init__(self, cluster: Cluster, bench, servers, *,
+                 failed=None, arrival_dt: float = 0.02,
+                 prompt_cap: int = 48, decode_cap: int = 10,
+                 out_token_scale: float = 40.0):
+        self.cluster = cluster
+        self.bench = bench
+        self.servers = servers
+        self.failed = (np.zeros(servers.n, bool) if failed is None
+                       else np.asarray(failed, bool))
+        self.est = CostModelBackend(bench, servers, self.failed)
+        self.arrival_dt = arrival_dt
+        self.prompt_cap = prompt_cap
+        self.decode_cap = decode_cap
+        self.out_token_scale = out_token_scale
+        self.t = cluster.t
+        self._last_uid: int | None = None
+        self._open: "list[tuple[int, dict]]" = []
+
+    # ------------------------------------------------------- task shaping
+    def prompt_tokens(self, task: int, vocab: int) -> np.ndarray:
+        """Deterministic per-task prompt, MIOBench prompt-length matched."""
+        L = int(np.clip(self.bench.tasks.text_len[task], 1, self.prompt_cap))
+        rng = np.random.default_rng(1_000_003 * (task + 1))
+        return rng.integers(0, vocab, L).astype(np.int32)
+
+    def gen_budget(self, task: int, server: int) -> int:
+        """Scaled-down CoT inflation: weaker models / harder tasks decode
+        more tokens (cost_model.expected_out_tokens / out_token_scale)."""
+        prof = self.cluster.handles[server].profile
+        out = cm.expected_out_tokens(
+            prof, float(self.bench.tasks.difficulty[task]))
+        return int(np.clip(round(out / self.out_token_scale), 2,
+                           self.decode_cap))
+
+    # --------------------------------------------------- backend interface
+    def execute(self, task: int, server: int):
+        lat_e, ok_e, _ = self.est.execute(task, server)
+        h = self.cluster.handles[server]
+        c = int(self.servers.cls[server])
+        quality_ok = (not self.failed[server]
+                      and int(self.bench.score[task, c]) == 1)
+        self._last_uid = self.cluster.submit(
+            server, task, self.prompt_tokens(task, h.cfg.vocab),
+            self.gen_budget(task, server), t_arrival=self.t,
+            quality_ok=quality_ok)
+        self.t += self.arrival_dt
+        self.cluster.advance_to(self.t)
+        return lat_e, ok_e, False
+
+    def register(self, rec: dict):
+        self._open.append((self._last_uid, rec))
+
+    def drain(self):
+        self.cluster.drain()
+        measured = {r["uid"]: r for r in self.cluster.collect()}
+        for uid, rec in self._open:
+            m = measured[uid]
+            rec.update(latency_r=m["service_s"], latency_total=m["e2e_s"],
+                       ttft_s=m["ttft_s"], timeout=m["timeout"],
+                       success=m["success"], pending=False)
+        self._open.clear()
+
+
+def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
+                    fail=(), **engine_kw) -> "list[EngineHandle]":
+    """Live handles for a ``[(class_idx, count), ...]`` spec (the
+    ``SYSTEM_CONFIGS`` layout) — pair with
+    ``cemllm.make_servers_from_spec`` so the sim table and the engine
+    fleet index the same servers.  Class 0/1 are edge tiers on the small
+    config; the last class is the cloud tier on the larger config."""
+    handles = []
+    i = 0
+    for class_idx, count in spec:
+        dev_name, prof_name = SERVER_CLASSES[class_idx]
+        for _ in range(count):
+            cloud = class_idx == len(SERVER_CLASSES) - 1
+            arch = CLASS_ARCHS[class_idx]
+            handles.append(EngineHandle(
+                f"{'cloud' if cloud else 'edge'}-{i} ({dev_name}/{arch})",
+                arch, cm.DEVICES[dev_name], cm.MODELS[prof_name],
+                is_cloud=cloud, seed=seed + i, fail=i in fail,
+                time_scale=time_scale, **engine_kw))
+            i += 1
+    return handles

@@ -80,12 +80,16 @@ class Request:
     token_times: list = dataclasses.field(default_factory=list)
 
     def ttft_s(self) -> float:
-        """Wall-clock time-to-first-token (prefill + queueing)."""
+        """Time-to-first-token (prefill + queueing), on the engine clock."""
         return self.token_times[0] - self.t_submit
 
     def itl_s(self) -> list:
-        """Wall-clock inter-token latencies of the decode phase."""
+        """Inter-token latencies of the decode phase (engine clock)."""
         return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    def e2e_s(self) -> float:
+        """Submit-to-last-token latency, on the engine clock."""
+        return self.token_times[-1] - self.t_submit
 
 
 @dataclasses.dataclass
@@ -104,7 +108,8 @@ class ServingEngine:
                  page_size: int = 16, num_pages: int | None = None,
                  prefix_caching: bool = True, prefill_chunk: int = 64,
                  prefill_budget: int | None = None,
-                 bucket_prompts: bool = True, min_bucket: int = 16):
+                 bucket_prompts: bool = True, min_bucket: int = 16,
+                 clock: "Callable[[], float] | None" = None):
         """``prefill_chunk`` — tokens appended to the cache per chunked
         prefill call (0 disables chunking: one monolithic, still bucketed,
         prefill per admission).  ``prefill_budget`` — prefill tokens spent
@@ -115,9 +120,17 @@ class ServingEngine:
         O(log max_seq) prefill variants instead of one per prompt length.
         Both knobs apply to the attention family only; recurrent/hybrid
         caches always use exact-shape monolithic prefill.
+
+        ``clock`` — time source for request timestamps (``t_submit`` /
+        ``token_times``).  Default is ``time.perf_counter`` (wall clock); an
+        external driver stepping this engine tick-by-tick (the cloud-edge
+        continuum harness, repro/serving/cluster.py) passes its virtual
+        clock instead, so ``latency_stats()`` reports TTFT/ITL/e2e in
+        virtual-clock seconds rather than host wall time.
         """
         self.model = model
         self.params = params
+        self._now = clock if clock is not None else time.perf_counter
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -463,6 +476,13 @@ class ServingEngine:
                 return
 
     # ------------------------------------------------------------- public
+    def busy(self) -> bool:
+        """Any work left: queued, mid-chunked-prefill, or decoding.  The
+        single source of idle truth for drain loops and external drivers
+        (continuum harness) alike."""
+        return bool(self.queue or any(s is not None for s in self.slots)
+                    or any(t is not None for t in self.prefill_tasks))
+
     def submit(self, req: Request):
         if len(req.tokens) > self.max_seq - 1:
             raise ValueError(
@@ -473,7 +493,7 @@ class ServingEngine:
                 "prompt")
         if len(req.tokens) < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
-        req.t_submit = time.perf_counter()
+        req.t_submit = self._now()
         self.queue.append(req)
 
     def _activate(self, slot: int, req: Request, first_tok: int):
@@ -482,7 +502,7 @@ class ServingEngine:
         prefill-sampled token already ends it (eos, or max_new_tokens == 1)
         finishes immediately instead of decoding its full budget."""
         req.output.append(first_tok)
-        req.token_times.append(time.perf_counter())
+        req.token_times.append(self._now())
         if (req.max_new_tokens <= 1
                 or (self.eos_id is not None and first_tok == self.eos_id)):
             req.done = True
@@ -514,7 +534,18 @@ class ServingEngine:
     def step(self) -> int:
         """One engine tick: spend the prefill budget (chunked path) or
         admit monolithically, then one batched decode step for every
-        fully-prefilled slot.  Returns the number of occupied slots."""
+        fully-prefilled slot.  Returns the number of occupied slots.
+
+        **Single-tick contract** (external drivers — e.g. the continuum
+        harness — rely on this): one call performs at most one batched
+        decode step, is safe to call with no work pending (it is then a
+        cheap no-op returning 0), and only mutates ``self.ticks`` by one
+        when any slot is occupied or prefilling.  An external scheduler may
+        therefore interleave ``step()`` calls across several engines under
+        a shared virtual clock; ``run_until_drained`` is just a loop over
+        this method with a *relative* ``drain_deadline`` guard, so the two
+        driving styles compose (draining never depends on the global tick
+        count accumulated by earlier external stepping)."""
         self._progress = False  # any admission/prefill advance this tick
         if self.chunked:
             self._schedule_prefill()
@@ -552,7 +583,7 @@ class ServingEngine:
         logits, self.cache = self._step(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits, -1))
         self.ticks += 1
-        t_now = time.perf_counter()
+        t_now = self._now()
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
@@ -573,9 +604,16 @@ class ServingEngine:
 
         Returns the finished requests; ``keep_finished=True`` leaves them
         on ``self.finished`` too (so ``latency_stats`` still sees them).
+
+        ``max_ticks`` bounds the ticks spent *inside this call* (a
+        ``drain_deadline`` relative to the current ``self.ticks``), so an
+        engine that has already been stepped externally for a long run —
+        the continuum harness advances engines tick-by-tick — can still be
+        drained afterwards.  The guard used to compare against the global
+        tick counter and tripped immediately in that case.
         """
-        while (self.queue or any(s is not None for s in self.slots)
-               or any(t is not None for t in self.prefill_tasks)):
+        drain_deadline = self.ticks + max_ticks
+        while self.busy():
             if self.step() == 0 and self.queue and not self._progress:
                 # nothing active yet admission failed: the head request can
                 # never fit (its worst case exceeds the whole pool)
@@ -583,12 +621,25 @@ class ServingEngine:
                 raise OutOfPagesError(
                     f"request {head.uid} needs {self._total_blocks(head)} "
                     f"pages but the pool only has {self.pool.num_pages - 1}")
-            if self.ticks > max_ticks:
+            if self.ticks > drain_deadline:
                 raise RuntimeError("engine did not drain")
         if keep_finished:
             return list(self.finished)
         out, self.finished = self.finished, []
         return out
+
+    def reset_prefix_cache(self):
+        """Drop every parked prefix block (paged path): the next admission
+        sees a cold cache.  The continuum replay harness calls this
+        between replays so runs are independent and deterministic (a warm
+        trie would hand later replays prefix hits the first one paid for).
+        K/V pages are only ever read through block tables, so the stale
+        device arrays need no zeroing.  Requires an idle engine."""
+        if not self.paged:
+            return
+        if self.busy():
+            raise RuntimeError("reset_prefix_cache needs an idle engine")
+        self.pool = BlockPool(self.pool.num_pages, self.page_size)
 
     # -------------------------------------------------------------- stats
     def kv_cache_bytes(self) -> int:
@@ -615,15 +666,21 @@ class ServingEngine:
         return out
 
     def latency_stats(self) -> dict:
-        """Wall-clock TTFT / inter-token-latency percentiles (seconds) over
-        finished requests (call before ``run_until_drained`` pops them)."""
+        """TTFT / inter-token / end-to-end latency percentiles (seconds)
+        over finished requests (call before ``run_until_drained`` pops
+        them).  Timestamps come from the engine's ``clock``: wall seconds
+        by default, **virtual-clock seconds** when an external driver (the
+        continuum harness) steps the engine under its own clock."""
         done = [r for r in self.finished if r.token_times]
         ttft = [r.ttft_s() for r in done]
         itl = [d for r in done for d in r.itl_s()]
+        e2e = [r.e2e_s() for r in done]
         pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
         return {"n_requests": len(done),
                 "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
-                "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95)}
+                "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95),
+                "e2e_p50_s": pct(e2e, 50), "e2e_p95_s": pct(e2e, 95),
+                "e2e_mean_s": float(np.mean(e2e)) if e2e else 0.0}
 
     def stats(self) -> dict:
         out = {"ticks": self.ticks, "paged": self.paged,

@@ -27,7 +27,6 @@ traffic drains away.  On top of that:
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import logging
 from typing import Callable
 
@@ -44,6 +43,14 @@ class ServerHandle:
     is_cloud: bool
     # returns (latency_s, success) for a task dispatched now
     execute: Callable[[int], "tuple[float, bool]"]
+    # optional live-load probe.  A handle backed by a real ServingEngine
+    # (repro/serving/cluster.EngineHandle) returns
+    #   {"queue_depth": int,              # queued + admitted + prefilling
+    #    "inflight_prefill_tokens": int,  # prompt tokens not yet in cache
+    #    "backlog_s": float}              # est. seconds to drain all that
+    # so the router can score against the engine's *actual* congestion
+    # instead of only its own dispatch bookkeeping (queue_s).
+    load: "Callable[[], dict] | None" = None
 
 
 class SimulatedServer(ServerHandle):
@@ -135,8 +142,32 @@ class QLMIORouter:
         self.log: list[dict] = []
 
     # --------------------------------------------------------------- scoring
+    def observed_load(self) -> np.ndarray:
+        """Per-server engine-reported backlog seconds (0 for handles
+        without a ``load`` probe).  Live handles report queue depth and
+        in-flight prefill tokens converted to drain time; simulated ones
+        report nothing and the router falls back to ``queue_s``."""
+        out = np.zeros(len(self.servers))
+        for s, h in enumerate(self.servers):
+            probe = getattr(h, "load", None)
+            if callable(probe):
+                obs = probe() or {}
+                out[s] = float(obs.get("backlog_s", 0.0))
+        return out
+
     def _effective_latency(self, task: int) -> np.ndarray:
-        """Per-server predicted seconds, net of expected prefix-cache hits."""
+        """Per-server predicted seconds, net of expected prefix-cache hits,
+        plus any engine-observed congestion beyond the router's own
+        ``queue_s`` bookkeeping.
+
+        ``queue_s`` only tracks work *this* router dispatched; a live
+        engine may also be loaded by chunked prefills still in flight or
+        by other traffic sources.  For servers exposing a ``load`` probe,
+        the excess ``max(backlog_s - queue_s, 0)`` is folded in here, so
+        ``_score``'s ``t_hat + queue_s`` totals ``t_hat + max(queue_s,
+        backlog_s)`` — observed congestion wins when it is larger, and
+        nothing is double-counted when the bookkeeping already covers it.
+        """
         n = len(self.servers)
         t_hat = np.array([self.milp(task, s) for s in range(n)])
         if self.prefix_hit_pred is not None and self.prefill_pred is not None:
@@ -144,6 +175,9 @@ class QLMIORouter:
                           0.0, 1.0)
             pre = np.array([self.prefill_pred(task, s) for s in range(n)])
             t_hat = np.maximum(t_hat - hit * pre, 1e-3)
+        obs = self.observed_load()
+        if obs.any():
+            t_hat = t_hat + np.maximum(obs - self.queue_s, 0.0)
         return t_hat
 
     def _score(self, task: int, t_hat: np.ndarray | None = None) -> np.ndarray:

@@ -7,7 +7,7 @@ via the pspec helpers in ``repro.distributed.sharding``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

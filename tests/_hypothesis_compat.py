@@ -8,7 +8,7 @@ in the same module still run.
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without the dep
     HAVE_HYPOTHESIS = False

@@ -1,6 +1,5 @@
 """Paper-core behaviour: predictors learn, losses are correct, the QLMIO
 agent improves over random, the simulator is deterministic and calibrated."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ from repro.core.feature_store import compute_features
 from repro.core.predictors import (Predictor, PredictorConfig, focal_loss,
                                    huber_loss)
 from repro.core.qlmio import QLMIO, QLMIOConfig
-from repro.data.taskgen import make_taskset, splits
+from repro.data.taskgen import splits
 from repro.sim.cemllm import greedy_latencies, make_servers
 from repro.sim.miobench import SERVER_CLASSES, generate, summary
 
