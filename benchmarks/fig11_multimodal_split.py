@@ -1,0 +1,225 @@
+"""Fig. 11 (repo extension): split-point offloading for multimodal requests.
+
+MoA-Off / CE-CoLLM observe that for a multimodal LLM request the
+interesting offloading decision sits *inside* the request: where does each
+media input cross the cloud-edge boundary?  Ship the raw image/audio over
+the server's uplink and encode it there (**raw-ship**), or run the
+modality encoder on the user's edge device and ship keep-top-k-compressed
+features (**edge-encode**)?  This benchmark replays multimodal MIOBench
+traces — prompts are *typed segment lists*: real procedural media encoded
+by the live ``models/mm_encoder.py`` into embedding spans, interleaved
+with text tokens — against live ``ServingEngine``s under the continuum
+harness (repro/serving/cluster.py), comparing both fixed split policies
+with the QLMIO-chosen per-request split (``cost_model.best_split`` folded
+into the routing scores).
+
+Media costs are charged at paper scale (ViT-B/whisper encoder rooflines,
+per-modality ``PAYLOAD_BYTES``) via ``MEDIA_SCALE``, the media analog of
+the harness's ``time_scale``: the engines generate real tokens from real
+injected features while the virtual clock prices the profiled hardware.
+
+CI-smoke entry: ``python benchmarks/fig11_multimodal_split.py --smoke``
+finishes on CPU well under a minute and asserts the QLMIO split choice
+beats both fixed policies on mean e2e latency at an equal completion
+rate.
+"""
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit  # noqa: E402
+from benchmarks.fig10_continuum_replay import analytic_predictors  # noqa: E402
+
+from repro.models.mm_encoder import (  # noqa: E402
+    MMEncoderConfig,
+    encode_audio,
+    encode_image,
+    init_mm_encoder,
+)
+from repro.serving.cluster import Cluster, build_continuum  # noqa: E402
+from repro.serving.segments import EmbedSegment, TextSegment  # noqa: E402
+from repro.sim import cost_model as cm  # noqa: E402
+from repro.sim.miobench import SERVER_CLASSES, generate  # noqa: E402
+
+# continuum spec: 1 cloud (thin WAN, fast compute) + 2 LAN edge tiers
+SPEC = [(2, 1), (1, 1), (0, 1)]
+
+# the user's device: strong enough that edge-encoding beats pushing raw
+# media through the cloud's thin WAN link, weak enough that raw-shipping
+# to a LAN edge server (which encodes faster) wins there — the split
+# decision is genuinely request- and server-dependent
+USER_DEVICE = cm.DeviceProfile("user_edge_device", 3e12, 30e9, 12.5e6,
+                               0.004)
+
+# media charged at paper scale on reduced-scale engines (time_scale analog)
+MEDIA_SCALE = 30.0
+
+KEEP_RATIO = 1 / 3  # keep-top-k compression knob (feature-uplink bytes)
+
+BUDGETS = {
+    "smoke": dict(n_tasks=200, users=24, arrival_dt=0.05, decode_cap=8),
+    "fast": dict(n_tasks=800, users=64, arrival_dt=0.05, decode_cap=10),
+    "paper": dict(n_tasks=3377, users=128, arrival_dt=0.05, decode_cap=12),
+}
+
+AUDIO_FRAMES, AUDIO_MEL = 24, 16
+
+
+def encode_media(bench, tasks, d_model: int, seed: int = 0):
+    """Run the live tiny encoder over every task's procedural media once;
+    returns {task: (EmbedSegment, MediaSpec) | None}."""
+    enc_cfg = MMEncoderConfig(d_model=d_model, img_size=32, patch=8,
+                              audio_dim=AUDIO_MEL, keep_ratio=KEEP_RATIO)
+    params = init_mm_encoder(enc_cfg, jax.random.PRNGKey(seed + 17))
+    img_ids = [t for t in tasks if bench.tasks.modality_name(t) == "image"]
+    au_ids = [t for t in tasks if bench.tasks.modality_name(t) == "audio"]
+    out = {t: None for t in tasks}
+    if img_ids:
+        feats = np.asarray(encode_image(
+            enc_cfg, params, bench.tasks.images(img_ids, 32)), np.float32)
+        spec = cm.media_spec("image", KEEP_RATIO)
+        for t, f in zip(img_ids, feats):
+            out[t] = (EmbedSegment(f, "image", spec.raw_bytes,
+                                   spec.feature_bytes), spec)
+    if au_ids:
+        frames = np.stack([bench.tasks.audio(t, AUDIO_FRAMES, AUDIO_MEL)
+                           for t in au_ids])
+        feats = np.asarray(encode_audio(enc_cfg, params, frames),
+                           np.float32)
+        spec = cm.media_spec("audio", KEEP_RATIO)
+        for t, f in zip(au_ids, feats):
+            out[t] = (EmbedSegment(f, "audio", spec.raw_bytes,
+                                   spec.feature_bytes), spec)
+    return out
+
+
+def run():
+    budget = "smoke" if "--smoke" in sys.argv[1:] else \
+        os.environ.get("BENCH_BUDGET", "smoke")
+    b = BUDGETS[budget]
+    bench = generate(seed=0, n_tasks=b["n_tasks"])
+    t_hat, b_hat = analytic_predictors(bench)
+    rng = np.random.default_rng(0)
+    tasks = [int(t) for t in rng.choice(bench.tasks.n, b["users"],
+                                        replace=False)]
+
+    t0 = time.time()
+    # base links carry the *text* payload only (request up, response
+    # down); media bytes are charged per request by the chosen split via
+    # media_delay_s — the default 300 KB payload would double-charge them
+    handles = build_continuum(SPEC, seed=0,
+                              payload_bytes=2 * cm.PAYLOAD_BYTES["text"])
+    cluster = Cluster(handles)
+    vocab = handles[0].cfg.vocab
+    media = encode_media(bench, tasks, handles[0].cfg.d_model)
+    n_media = sum(m is not None for m in media.values())
+    print(f"fig11,continuum,{len(handles)}_live_engines,"
+          f"{n_media}/{len(tasks)}_media_tasks,build_s,{time.time()-t0:.1f}")
+
+    def text_span(task: int) -> np.ndarray:
+        L = int(np.clip(bench.tasks.text_len[task], 1, 24))
+        r = np.random.default_rng(1_000_003 * (task + 1))
+        return r.integers(0, vocab, L).astype(np.int32)
+
+    def gen_budget(task: int, server: int) -> int:
+        out = cm.expected_out_tokens(handles[server].profile,
+                                     float(bench.tasks.difficulty[task]))
+        return int(np.clip(round(out / 40.0), 2, b["decode_cap"]))
+
+    # server class of each handle, for the analytic predictor tables
+    class_devices = [d for d, _ in SERVER_CLASSES]
+    cls = np.array([class_devices.index(h.device.name) for h in handles])
+
+    def split_costs(task: int):
+        """[n_servers] dicts of scaled split costs, or None (text-only)."""
+        m = media[task]
+        if m is None:
+            return None
+        _, spec = m
+        return [
+            {k: v * MEDIA_SCALE for k, v in
+             cm.split_point_s(spec, USER_DEVICE, h.device).items()}
+            for h in handles]
+
+    def replay(mode: str):
+        """mode: 'raw' | 'edge' (forced split) | 'auto' (QLMIO-chosen)."""
+        cluster.reset()
+        t = 0.0
+        choices = {"raw": 0, "edge": 0, "none": 0}
+        for task in tasks:
+            costs = split_costs(task)
+            backlog = np.array([h._load()["backlog_s"] for h in handles])
+            lat = t_hat[task, cls] + backlog
+            if costs is not None:
+                per_server = [c[mode] if mode != "auto" else min(c.values())
+                              for c in costs]
+                lat = lat + np.asarray(per_server)
+            total = np.maximum(lat, 1e-9)
+            u = -total / max(total.min(), 1e-6) + (
+                3.0 * b_hat[task, cls] - 2.0)
+            s = int(np.argmax(u))
+            if costs is None:
+                choices["none"] += 1
+                delay, segs = 0.0, None
+                toks = text_span(task)
+            else:
+                c = costs[s]
+                choice = mode if mode != "auto" else min(c, key=c.get)
+                choices[choice] += 1
+                delay = c[choice]
+                seg, _ = media[task]
+                segs, toks = [seg, TextSegment(text_span(task))], None
+            quality_ok = int(bench.score[task, int(cls[s])]) == 1
+            cluster.submit(s, task, toks, gen_budget(task, s), t_arrival=t,
+                           quality_ok=quality_ok, segments=segs,
+                           media_delay_s=delay)
+            t += b["arrival_dt"]
+            cluster.advance_to(t)
+        cluster.drain()
+        recs = cluster.collect()
+        e2e = [r["e2e_s"] for r in recs]
+        return {"mean_e2e_s": float(np.mean(e2e)),
+                "p95_e2e_s": float(np.percentile(e2e, 95)),
+                "completion_rate": float(np.mean(
+                    [r["success"] for r in recs])),
+                "split_choices": choices}
+
+    results = {}
+    print("fig11,policy,mean_e2e_s,p95_e2e_s,completion_rate,"
+          "splits(raw/edge/none)")
+    for mode, name in [("raw", "all_raw_ship"), ("edge", "all_edge_encode"),
+                       ("auto", "qlmio_split")]:
+        r = replay(mode)
+        results[name] = r
+        ch = r["split_choices"]
+        print(f"fig11,{name},{r['mean_e2e_s']:.3f},{r['p95_e2e_s']:.3f},"
+              f"{r['completion_rate']:.3f},"
+              f"{ch['raw']}/{ch['edge']}/{ch['none']}")
+
+    q = results["qlmio_split"]
+    raw, edge = results["all_raw_ship"], results["all_edge_encode"]
+    red_raw = 1.0 - q["mean_e2e_s"] / max(raw["mean_e2e_s"], 1e-9)
+    red_edge = 1.0 - q["mean_e2e_s"] / max(edge["mean_e2e_s"], 1e-9)
+    print(f"fig11,headline,e2e_reduction_vs_raw,{red_raw:.3f},"
+          f"vs_edge,{red_edge:.3f},wall_s,{time.time() - t0:.1f}")
+    emit("fig11_multimodal_split", {"results": results,
+                                    "e2e_reduction_vs_raw_ship": red_raw,
+                                    "e2e_reduction_vs_edge_encode": red_edge})
+    # acceptance: the per-request QLMIO split choice beats both fixed
+    # policies on mean e2e at an equal-or-better completion rate
+    assert q["mean_e2e_s"] < raw["mean_e2e_s"], \
+        f"qlmio {q['mean_e2e_s']:.3f}s !< all-raw {raw['mean_e2e_s']:.3f}s"
+    assert q["mean_e2e_s"] < edge["mean_e2e_s"], \
+        f"qlmio {q['mean_e2e_s']:.3f}s !< all-edge {edge['mean_e2e_s']:.3f}s"
+    assert q["completion_rate"] >= max(raw["completion_rate"],
+                                       edge["completion_rate"])
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -36,3 +36,8 @@ python scripts/check_bench.py results/bench.json
 # continuum replay smoke: QLMIO over real ServingEngines must beat the
 # all-cloud baseline on mean e2e latency at a matching completion rate
 PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig10_continuum_replay.py
+
+# multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
+# ship vs edge-encode) must beat both fixed policies on mean e2e latency
+# at an equal completion rate, over live engines with real media segments
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig11_multimodal_split.py --smoke

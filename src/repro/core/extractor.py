@@ -6,6 +6,13 @@ feature, model-type embedding, device-type embedding — projected to a common
 
 The frozen encoder outputs are precomputed once per task (they never change),
 so training only runs these learnable parts.
+
+This extractor feeds the *offloading predictors* (MGQP/MILP heads, D3QN)
+only.  The serving stack has its own real encoder path now: media that
+actually travels through the request pipeline is encoded by
+``repro/models/mm_encoder.py`` into embedding spans
+(``repro/serving/segments.py``) and prefilled by the engine — see the
+README's "Multimodal serving" section.
 """
 from __future__ import annotations
 

@@ -4,6 +4,10 @@ MMBench itself (3,377 image+text choice questions, 20 task categories) is not
 available offline; we generate a statistically matched stand-in: per-category
 difficulty distributions, prompt-length distributions, and procedural images
 whose statistics (edges, texture, entropy) vary with category and difficulty.
+Each task additionally carries a media ``modality`` (image / audio / text-
+only, category-biased) and a matching procedural media generator
+(``image`` / ``audio``), so the multimodal serving benchmarks can replay
+traces where real media segments travel through the request path.
 Seeded and fully deterministic.
 """
 from __future__ import annotations
@@ -23,6 +27,11 @@ CATEGORIES = [
 
 N_TASKS = 3377  # match MMBench
 
+# per-task media modality: what travels with the text prompt.  MMBench is
+# image+text; the multimodal serving traces add an audio share so the
+# split-point benchmarks exercise more than one payload class.
+MODALITIES = ["text", "image", "audio"]
+
 
 @dataclasses.dataclass
 class TaskSet:
@@ -32,6 +41,7 @@ class TaskSet:
     text_len: np.ndarray  # [n] int (prompt tokens)
     image_entropy: np.ndarray  # [n] float
     seed: int
+    modality: np.ndarray | None = None  # [n] int into MODALITIES
 
     def text_tokens(self, idx: int, max_len: int, vocab: int) -> np.ndarray:
         """Deterministic per-task DistilBERT-style token ids + mask."""
@@ -65,6 +75,26 @@ class TaskSet:
         img += rng.normal(0, 0.05 + 0.25 * dif, img.shape)  # difficulty noise
         return np.clip(img, 0, 1).astype(np.float32)
 
+    def audio(self, idx: int, n_frames: int, n_mel: int = 16) -> np.ndarray:
+        """Procedural [n_frames, n_mel] log-mel-like frames: a category-
+        pitched harmonic ramp + difficulty-scaled noise (the audio analog
+        of ``image``).  Seeded and fully deterministic."""
+        rng = np.random.default_rng(self.seed * 3_000_017 + idx)
+        cat = int(self.category[idx])
+        dif = float(self.difficulty[idx])
+        t = np.arange(n_frames)[:, None] / max(n_frames, 1)
+        m = np.arange(n_mel)[None, :] / max(n_mel, 1)
+        frames = (0.5 + 0.5 * np.sin(2 * np.pi * ((1 + cat % 5) * t
+                                                  + (1 + cat % 3) * m))
+                  ) * np.exp(-2.0 * m)
+        frames += rng.normal(0, 0.05 + 0.25 * dif, frames.shape)
+        return frames.astype(np.float32)
+
+    def modality_name(self, idx: int) -> str:
+        if self.modality is None:
+            return "image"  # MMBench default: every task carries an image
+        return MODALITIES[int(self.modality[idx])]
+
     def images(self, idxs, size: int) -> np.ndarray:
         return np.stack([self.image(int(i), size) for i in idxs])
 
@@ -83,7 +113,17 @@ def make_taskset(n: int = N_TASKS, seed: int = 0) -> TaskSet:
         cat_base[category] + 0.35 * (rng.beta(2, 2, n) - 0.5), 0.02, 0.98)
     text_len = np.clip(rng.lognormal(3.6, 0.5, n), 8, 256).astype(np.int64)
     image_entropy = 0.3 + 0.6 * difficulty + rng.normal(0, 0.05, n)
-    return TaskSet(n, category, difficulty, text_len, image_entropy, seed)
+    # media modality, category-biased: harder (visual-heavy) categories
+    # are mostly image-bound, the rest less so; both keep a 15% audio
+    # share and the remainder is text-only
+    p_img = np.where(cat_base[category] > 0.5, 0.8, 0.6)
+    u = rng.random(n)
+    modality = np.where(u < p_img, MODALITIES.index("image"),
+                        np.where(u < p_img + 0.15,
+                                 MODALITIES.index("audio"),
+                                 MODALITIES.index("text")))
+    return TaskSet(n, category, difficulty, text_len, image_entropy, seed,
+                   modality=modality.astype(np.int64))
 
 
 def splits(n: int, seed: int = 0, ratios=(0.8, 0.1, 0.1)):

@@ -147,6 +147,15 @@ class Model:
         local:global); recurrent/hybrid/cross-attention caches are dense."""
         return self.cfg.block_kind == "attn" and not self.cfg.cross_attention
 
+    @property
+    def supports_embed_spans(self) -> bool:
+        """Embedding-span (multimodal) prefill needs the embed-at-the-
+        boundary attention path: recurrent/hybrid state updates are fused
+        with their token scans, and whisper carries media through its own
+        encoder instead.  Same pure-attention-family predicate as paged
+        serving (either cache backend works; the *family* is what gates)."""
+        return self.supports_paged
+
     def abstract_paged_cache(self, num_pages: int, block_size: int):
         """Paged layout: K/V pages shared across the batch, addressed by a
         per-slot block table instead of a dense [B, max_seq] region."""
@@ -183,15 +192,27 @@ class Model:
         last column.  Causal masking guarantees the padded tail never
         influences real positions.  Only attention-family caches support
         this (``supports_bucketed_prefill``).
+
+        ``batch["embeds"]`` [B, S, d] + ``batch["embed_mask"]`` [B, S]
+        optionally inject precomputed embedding spans (image patches /
+        audio frames; repro/serving/segments.py) at masked positions —
+        token→embedding lookup and span injection both happen once here at
+        the entry point (``lm.embed_inputs``), everything below operates
+        on embeddings.  Attention family only (``supports_embed_spans``).
         """
         cfg = self.cfg
         tokens = batch["tokens"]
         length = batch.get("length")
+        embeds = batch.get("embeds")
         B, S = tokens.shape
         if length is not None and not self.supports_bucketed_prefill:
             raise ValueError(
                 f"{cfg.name}: bucketed (padded) prefill needs a positional "
                 "cache; recurrent state would integrate the padding")
+        if embeds is not None and not self.supports_embed_spans:
+            raise ValueError(
+                f"{cfg.name}: embedding-span prefill needs the attention "
+                "family (see Model.supports_embed_spans)")
         if length is None:
             pos_map = jnp.broadcast_to(jnp.arange(S), (B, S))
         else:
@@ -216,7 +237,8 @@ class Model:
                      "sc": sc, "sn": sn, "sm": sm, "sh": sh}
         else:
             h, (k, v) = lm.attn_forward(cfg, params, tokens,
-                                        return_cache=True)
+                                        return_cache=True, embeds=embeds,
+                                        embed_mask=batch.get("embed_mask"))
             cache = {"k": k, "v": v, "pos_map": pos_map}
         logits = lm.last_logits(cfg, params, lm.last_hidden(h, length))
         return logits, cache
@@ -233,13 +255,17 @@ class Model:
         ``batch["length"]`` [B] int32 optionally carries the true suffix
         length when the suffix is right-padded to a shape bucket; the
         caller then scatters only the first ``length`` K/V columns.
+        ``batch["embeds"]``/``batch["embed_mask"]`` inject embedding spans
+        of the suffix, as in ``prefill``.
         """
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: prefix prefill needs attn family")
         h, (k, v) = lm.attn_forward(cfg, params, batch["tokens"],
                                     return_cache=True,
-                                    prefix_kv=(prefix_k, prefix_v))
+                                    prefix_kv=(prefix_k, prefix_v),
+                                    embeds=batch.get("embeds"),
+                                    embed_mask=batch.get("embed_mask"))
         logits = lm.last_logits(cfg, params,
                                 lm.last_hidden(h, batch.get("length")))
         return logits, (k, v)
@@ -249,11 +275,7 @@ class Model:
         """One token for the whole batch. batch = {tokens [B], pos [B]}."""
         cfg = self.cfg
         tokens, pos = batch["tokens"], batch["pos"]
-        B = tokens.shape[0]
-        dt = jnp.dtype(cfg.act_dtype)
-        x = params["embed"]["table"].astype(dt)[tokens]  # [B, d]
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        x = lm.embed_tokens(cfg, params, tokens)  # [B, d]
 
         if cfg.block_kind == "mamba_hybrid":
             return self._zamba2_decode(params, cache, x, pos)
@@ -415,10 +437,7 @@ class Model:
         B = tokens.shape[0]
         bs = cache["k_pages"].shape[2]
         NB = tables.shape[1]
-        dt = jnp.dtype(cfg.act_dtype)
-        x = params["embed"]["table"].astype(dt)[tokens]  # [B, d]
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        x = lm.embed_tokens(cfg, params, tokens)  # [B, d]
 
         page = jnp.maximum(tables[jnp.arange(B), pos // bs], 0)
         off = pos % bs
@@ -463,16 +482,19 @@ class Model:
         the chunk's last real token, cache).  Compile variants are bounded
         by the number of chunk buckets: every other argument is
         shape-static.
+
+        ``batch["embeds"]``/``batch["embed_mask"]`` [1, C, d] / [1, C]
+        optionally inject this chunk's slice of a prompt's embedding spans
+        (``lm.embed_inputs``) — a media span crossing a chunk boundary
+        just lands in two consecutive chunks.
         """
         cfg = self.cfg
         tokens, slot = batch["tokens"], batch["slot"]
         pos0, n = batch["pos"], batch["length"]
         B, C = tokens.shape
         Sa = cache["k"].shape[2]
-        dt = jnp.dtype(cfg.act_dtype)
-        x = params["embed"]["table"].astype(dt)[tokens]  # [1, C, d]
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        x = lm.embed_inputs(cfg, params, tokens, batch.get("embeds"),
+                            batch.get("embed_mask"))  # [1, C, d]
         positions = (pos0 + jnp.arange(C)).astype(jnp.int32)  # [C]
         wpos = jnp.where(jnp.arange(C) < n, positions, Sa)  # OOB -> dropped
         qpos = positions[None]  # [1, C]
@@ -514,10 +536,8 @@ class Model:
         B, C = tokens.shape
         P, bs = cache["k_pages"].shape[1:3]
         NB = tables.shape[1]
-        dt = jnp.dtype(cfg.act_dtype)
-        x = params["embed"]["table"].astype(dt)[tokens]  # [1, C, d]
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        x = lm.embed_inputs(cfg, params, tokens, batch.get("embeds"),
+                            batch.get("embed_mask"))  # [1, C, d]
         positions = (pos0 + jnp.arange(C)).astype(jnp.int32)  # [C]
         valid = jnp.arange(C) < n
         blk = jnp.clip(positions // bs, 0, NB - 1)

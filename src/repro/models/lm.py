@@ -43,6 +43,39 @@ Tree = Any
 # ------------------------------------------------------------------ helpers
 
 
+def embed_tokens(cfg: ArchConfig, params, tokens):
+    """Token-table lookup in the activation dtype (+ gemma embed scale).
+
+    The single place token ids become vectors — every prefill/decode entry
+    point routes through here, so everything past it operates on
+    embeddings and is modality-agnostic.
+    """
+    dt = jnp.dtype(cfg.act_dtype)
+    x = params["embed"]["table"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x
+
+
+def embed_inputs(cfg: ArchConfig, params, tokens, embeds=None,
+                 embed_mask=None):
+    """Entry-point embedding: token lookup + embedding-span injection.
+
+    ``tokens`` [..., S] int; ``embeds`` [..., S, d] optionally carries
+    precomputed embedding spans (image patches / audio frames — see
+    repro/serving/segments.py) with ``embed_mask`` [..., S] True at
+    injected positions.  Masked positions take the ``embeds`` row *as-is*
+    (encoder outputs are already at model scale — no embed_scale);
+    unmasked positions take the token lookup.  Token ids are clamped to 0
+    first so the bookkeeping key ids of embedding positions (negative by
+    construction) can ride the same array.
+    """
+    x = embed_tokens(cfg, params, jnp.maximum(tokens, 0))
+    if embeds is not None:
+        x = jnp.where(embed_mask[..., None], embeds.astype(x.dtype), x)
+    return x
+
+
 def _norm(p, x, kind: str, prefix: str):
     eps = 1e-6
     xf = x.astype(jnp.float32)
@@ -321,7 +354,8 @@ def _regroup_layers(cfg: ArchConfig, tree):
 
 
 def attn_forward(cfg: ArchConfig, params, tokens, *, remat=True,
-                 return_cache=False, prefix_kv=None):
+                 return_cache=False, prefix_kv=None, embeds=None,
+                 embed_mask=None):
     """tokens [B,S] -> final hidden [B,S,d] (+ optional stacked KV cache).
 
     ``prefix_kv = (k, v)`` with shapes [L, B, Spre, Hkv, Dh] turns this
@@ -329,12 +363,14 @@ def attn_forward(cfg: ArchConfig, params, tokens, *, remat=True,
     [Spre, Spre+S) and attend to the cached prefix K/V without recomputing
     it (the paged serving engine's prefix-cache hit path).  The returned
     cache covers only the suffix.
+
+    ``embeds``/``embed_mask`` optionally inject precomputed embedding
+    spans (``embed_inputs``); everything below the embedding boundary is
+    identical for token and embedding positions, so a text-only prompt
+    produces bit-identical logits through either path.
     """
     B, S = tokens.shape
-    dt = jnp.dtype(cfg.act_dtype)
-    x = params["embed"]["table"].astype(dt)[tokens]
-    if cfg.embed_scale:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = embed_inputs(cfg, params, tokens, embeds, embed_mask)
     offset = 0 if prefix_kv is None else prefix_kv[0].shape[2]
     positions = offset + jnp.arange(S)
     rope_l, rope_g = _rope_tables(cfg, offset + S)
@@ -444,8 +480,7 @@ def _shared_attn_apply(cfg, ps, x, x0, ropes, positions, *, kv_cache=None,
 def zamba2_forward(cfg: ArchConfig, params, tokens, *, remat=True,
                    return_cache=False):
     B, S = tokens.shape
-    dt = jnp.dtype(cfg.act_dtype)
-    x = params["embed"]["table"].astype(dt)[tokens]
+    x = embed_tokens(cfg, params, tokens)
     x0 = x
     positions = jnp.arange(S)
     ropes = _rope_tables(cfg, S)
@@ -474,8 +509,7 @@ def zamba2_forward(cfg: ArchConfig, params, tokens, *, remat=True,
 def xlstm_forward(cfg: ArchConfig, params, tokens, *, remat=True,
                   return_cache=False):
     B, S = tokens.shape
-    dt = jnp.dtype(cfg.act_dtype)
-    x = params["embed"]["table"].astype(dt)[tokens]
+    x = embed_tokens(cfg, params, tokens)
 
     def group(x, pg):
         pm, psl = pg
@@ -528,7 +562,7 @@ def whisper_decode_forward(cfg: ArchConfig, params, tokens, enc, *, remat=True,
                            return_cache=False):
     B, S = tokens.shape
     d = cfg.d_model
-    x = params["embed"]["table"].astype(jnp.dtype(cfg.act_dtype))[tokens]
+    x = embed_tokens(cfg, params, tokens)
     pos = jnp.arange(S)
     half = d // 2
     freqs = jnp.exp(-jnp.arange(half) / (half - 1) * jnp.log(10000.0))

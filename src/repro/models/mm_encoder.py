@@ -1,0 +1,151 @@
+"""Lightweight multimodal encoder: media -> LM-injectable embedding spans.
+
+The modality-aware request path (repro/serving/segments.py) carries
+precomputed embedding spans; this module is the model that produces them —
+small enough to run on an edge device, output dim equal to the serving
+LM's ``d_model`` so features inject straight into the prefill entry
+points (``lm.embed_inputs``):
+
+  * images — conv patchify (non-overlapping ``patch x patch`` windows,
+    implemented as an unfold + linear, which is exactly a stride-``patch``
+    conv) followed by ``n_layers`` pre-norm transformer blocks;
+  * audio  — per-frame linear projection into the same trunk.
+
+The trunk reuses the repo's attention/norm stack: blocks ride
+``models.attention.flash_attention`` (the blocked streaming-softmax path
+that lowers to the Pallas flash kernel on TPU) and the rmsnorm apply from
+``nn/layers.py``, so no new kernel surface is introduced.
+
+**Compression knob**: ``keep_ratio`` applies keep-top-k pooling to the
+encoded span — positions are ranked by fp32 feature L2 norm and only the
+top ``ceil(ratio * n)`` are kept *in original order*.  The span (and with
+it the feature-uplink bytes and the LM prefill length) shrinks
+proportionally; ``sim/cost_model.py``'s split-point decision trades those
+bytes against shipping the raw media.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention
+from repro.nn.layers import apply_linear, apply_rmsnorm, linear, rmsnorm
+from repro.nn.spec import TensorSpec, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class MMEncoderConfig:
+    d_model: int  # output dim == the serving LM's d_model
+    img_size: int = 32
+    patch: int = 8
+    audio_dim: int = 16  # input frame feature dim (mel-bin stand-in)
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    max_span: int = 256  # learned position table length
+    keep_ratio: float = 1.0  # keep-top-k pooling fraction (1.0 = keep all)
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    def kept(self, n: int) -> int:
+        """Span length after keep-top-k pooling of ``n`` positions."""
+        return max(1, min(n, math.ceil(self.keep_ratio * n)))
+
+
+def mm_encoder_spec(cfg: MMEncoderConfig):
+    d, L = cfg.d_model, cfg.n_layers
+    pdim = cfg.patch * cfg.patch * 3
+
+    def stack(p):  # add the [L] scan dim to a linear/rmsnorm spec
+        return {k: TensorSpec((L,) + s.shape, ("layers",) + s.axes,
+                              s.init, s.scale) for k, s in p.items()}
+
+    nn = (None, None)
+    return {
+        "patch_proj": linear(pdim, d, axes=nn, bias=True,
+                             scale=pdim ** -0.5),
+        "audio_proj": linear(cfg.audio_dim, d, axes=nn, bias=True,
+                             scale=cfg.audio_dim ** -0.5),
+        "pos": TensorSpec((cfg.max_span, d), nn, "normal", 0.02),
+        "blocks": {
+            "ln1": stack(rmsnorm(d, axes=(None,))),
+            "wq": stack(linear(d, d, axes=nn, scale=d ** -0.5)),
+            "wk": stack(linear(d, d, axes=nn, scale=d ** -0.5)),
+            "wv": stack(linear(d, d, axes=nn, scale=d ** -0.5)),
+            "wo": stack(linear(d, d, axes=nn, scale=d ** -0.5)),
+            "ln2": stack(rmsnorm(d, axes=(None,))),
+            "w_gate": stack(linear(d, cfg.d_ff, axes=nn, scale=d ** -0.5)),
+            "w_up": stack(linear(d, cfg.d_ff, axes=nn, scale=d ** -0.5)),
+            "w_down": stack(linear(cfg.d_ff, d, axes=nn,
+                                   scale=cfg.d_ff ** -0.5)),
+        },
+        "final": rmsnorm(d, axes=(None,)),
+    }
+
+
+def init_mm_encoder(cfg: MMEncoderConfig, key, param_dtype=jnp.float32):
+    return init_params(mm_encoder_spec(cfg), key, param_dtype)
+
+
+def _block(pl, x, n_heads: int):
+    """Pre-norm non-causal transformer block on [B, S, d]."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    xn = apply_rmsnorm(pl["ln1"], x)
+    q = apply_linear(pl["wq"], xn).reshape(B, S, n_heads, dh)
+    k = apply_linear(pl["wk"], xn).reshape(B, S, n_heads, dh)
+    v = apply_linear(pl["wv"], xn).reshape(B, S, n_heads, dh)
+    o = flash_attention(q, k, v, causal=False)
+    x = x + apply_linear(pl["wo"], o.reshape(B, S, d))
+    xn = apply_rmsnorm(pl["ln2"], x)
+    h = jax.nn.silu(apply_linear(pl["w_gate"], xn)) \
+        * apply_linear(pl["w_up"], xn)
+    return x + apply_linear(pl["w_down"], h)
+
+
+def _trunk(cfg: MMEncoderConfig, params, x):
+    """Positions + blocks + final norm on projected inputs [B, S, d]."""
+    S = x.shape[1]
+    if S > cfg.max_span:
+        raise ValueError(f"span of {S} exceeds max_span={cfg.max_span}")
+    x = x + params["pos"][:S][None].astype(x.dtype)
+
+    def body(x, pl):
+        return _block(pl, x, cfg.n_heads), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return apply_rmsnorm(params["final"], x)
+
+
+def keep_top_k(features, k: int):
+    """Keep-top-k pooling: the ``k`` highest-L2-norm positions of each
+    span, order preserved — the compression knob for feature uplinks."""
+    score = jnp.sqrt(jnp.sum(jnp.square(
+        features.astype(jnp.float32)), -1))
+    _, idx = jax.lax.top_k(score, k)
+    idx = jnp.sort(idx, axis=-1)
+    return jnp.take_along_axis(features, idx[..., None], axis=1)
+
+
+def encode_image(cfg: MMEncoderConfig, params, images):
+    """images [B, H, W, 3] float in [0, 1] -> features [B, kept, d]."""
+    B, H, W, _ = images.shape
+    p = cfg.patch
+    if H % p or W % p:
+        raise ValueError(f"image {H}x{W} not divisible by patch={p}")
+    # unfold into non-overlapping patches == stride-p conv patchify
+    x = images.reshape(B, H // p, p, W // p, p, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // p) * (W // p), -1)
+    x = _trunk(cfg, params, apply_linear(params["patch_proj"], x))
+    return keep_top_k(x, cfg.kept(x.shape[1]))
+
+
+def encode_audio(cfg: MMEncoderConfig, params, frames):
+    """frames [B, T, audio_dim] -> features [B, kept, d]."""
+    x = _trunk(cfg, params, apply_linear(params["audio_proj"], frames))
+    return keep_top_k(x, cfg.kept(x.shape[1]))

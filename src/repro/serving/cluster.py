@@ -23,6 +23,14 @@ against the fleet under a shared **virtual clock**:
     from the MIOBench success predictors, replacing
     ``SimulatedServer._execute``'s closed-form latency.
 
+Multimodal requests ride the same harness: ``Cluster.submit`` accepts
+typed segments (repro/serving/segments.py) and a ``media_delay_s`` charge,
+and ``EngineHandle.split_point`` answers the per-request *split-point*
+question — ship raw media and encode at this server, or encode on the
+source edge device and ship keep-top-k-compressed features — from the
+cost model's per-modality uplink/encode rooflines
+(``cost_model.best_split``).
+
 ``EngineBackend`` plugs the harness into ``sim.cemllm.Episode`` with the
 same interface as ``CostModelBackend``: dispatch-time estimates are the
 cost-model numbers (so a deterministic policy takes identical decisions
@@ -63,7 +71,7 @@ class EngineHandle(ServerHandle):
     def __init__(self, name: str, arch: str, device: cm.DeviceProfile,
                  profile: cm.ModelProfile, *, is_cloud: bool = False,
                  seed: int = 0, max_batch: int = 2, max_seq: int = 96,
-                 time_scale: float = 1.0, payload_bytes: float = 300e3,
+                 time_scale: float = 1.0, payload_bytes: float | None = None,
                  fail: bool = False, **engine_kw):
         cfg = reduced(get_config(arch))
         self.cfg = cfg
@@ -80,7 +88,13 @@ class EngineHandle(ServerHandle):
         self.decode_tick_s = (time_scale * profile.n_active
                               * profile.bytes_per_param / bw)
         self.prefill_tok_s = time_scale * 2.0 * profile.n_active / eff
-        self.link_s = payload_bytes / device.net_bw + device.rtt  # round trip
+        # payload (default: the cost model's text+image request) split
+        # evenly between request and response; both halves priced by the
+        # shared cost-model link helper
+        if payload_bytes is None:
+            payload_bytes = cm.payload_bytes()
+        self.up_s = float(cm.uplink_s(payload_bytes / 2, device))
+        self.down_s = float(cm.downlink_s(payload_bytes / 2, device))
         self.fail = fail
         self.pending: list = []  # min-heap of (t_ready, seq, Request)
         self._seq = 0
@@ -92,10 +106,27 @@ class EngineHandle(ServerHandle):
 
     # ------------------------------------------------------- network link
     def uplink_s(self) -> float:
-        return self.link_s / 2
+        return self.up_s
 
     def downlink_s(self) -> float:
-        return self.link_s / 2
+        return self.down_s
+
+    # ------------------------------------------------------- split point
+    def split_point(self, spec: cm.MediaSpec,
+                    src: cm.DeviceProfile) -> "tuple[str, float]":
+        """Where to encode ``spec``'s media for a request bound to this
+        server: ``("raw", s)`` — ship raw media, encode here — or
+        ``("edge", s)`` — encode on the source device ``src``, ship
+        compressed features.  ``s`` is the extra virtual seconds the
+        chosen split adds on top of the request's base uplink; pass it to
+        ``Cluster.submit(media_delay_s=...)``."""
+        return cm.best_split(spec, src, self.device)
+
+    def split_delay_s(self, spec: cm.MediaSpec, src: cm.DeviceProfile,
+                      choice: str) -> float:
+        """Extra virtual seconds of a *forced* split choice (the fixed
+        all-raw-ship / all-edge-encode baseline policies)."""
+        return cm.split_point_s(spec, src, self.device)[choice]
 
     # ---------------------------------------------------- virtual stepping
     def enqueue(self, req: Request, t_ready: float):
@@ -197,17 +228,30 @@ class Cluster:
         self._uid = 0
 
     def submit(self, server: int, task: int, tokens, max_new_tokens: int,
-               t_arrival: float, quality_ok: bool = True) -> int:
+               t_arrival: float, quality_ok: bool = True, segments=None,
+               media_delay_s: float = 0.0) -> int:
         """Dispatch one task to ``server`` at virtual ``t_arrival``; the
         request reaches the engine after the uplink delay.  ``quality_ok``
         is the success-predictor verdict for (task, server) — generated
         tokens are real but random, so answer quality is judged by the
-        predictor, as in the sim."""
+        predictor, as in the sim.
+
+        ``segments`` makes the request multimodal (typed spans,
+        repro/serving/segments.py; ``tokens`` is then ignored) and
+        ``media_delay_s`` charges the chosen split point's extra cost —
+        edge-side encode + media serialization from
+        ``EngineHandle.split_point`` — before the request reaches the
+        engine, so measured TTFT/e2e include where the media crossed the
+        continuum."""
         h = self.handles[server]
         self._uid += 1
-        req = Request(self._uid, np.asarray(tokens, np.int32),
-                      max_new_tokens=int(max_new_tokens))
-        h.enqueue(req, t_arrival + h.uplink_s())
+        if segments is not None:
+            req = Request(self._uid, segments=segments,
+                          max_new_tokens=int(max_new_tokens))
+        else:
+            req = Request(self._uid, np.asarray(tokens, np.int32),
+                          max_new_tokens=int(max_new_tokens))
+        h.enqueue(req, t_arrival + h.uplink_s() + media_delay_s)
         self.records[self._uid] = {"uid": self._uid, "task": task,
                                    "server": server, "t_arrival": t_arrival,
                                    "req": req, "quality_ok": bool(quality_ok)}

@@ -27,6 +27,16 @@ prefill (mixed prefill/decode continuous batching).  Recurrent/hybrid
 families keep exact-shape monolithic prefill: their state integrates every
 input token, so padding would corrupt it.
 
+Multimodal requests (attention family): a ``Request`` may carry typed
+``segments`` (repro/serving/segments.py) — text token spans interleaved
+with precomputed embedding spans (image patches / audio frames from
+repro/models/mm_encoder.py).  The engine books everything (lengths,
+buckets, the prefix trie) against the per-position *key ids* (token ids /
+negative content-digest ids), and hands the embedding rows + injection
+mask to the prefill entry points, which embed-and-inject once at the
+boundary (``lm.embed_inputs``).  Two requests carrying the same image hit
+each other's prefix-cache blocks exactly like identical text would.
+
 Works for every arch family — per-leaf cache batch dims are keyed by the
 cache layout names in repro/models/api.py.
 """
@@ -42,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serving import segments as sg
 from repro.serving.kv_cache import BlockPool, BlockTable, OutOfPagesError
 
 
@@ -70,14 +81,37 @@ _SEQ_DIM = {"k": 2, "v": 2, "pos_map": 1}
 @dataclasses.dataclass
 class Request:
     uid: int
-    tokens: np.ndarray  # prompt token ids
+    # prompt token ids; for a multimodal request (``segments`` given) this
+    # is derived automatically: the per-position bookkeeping *key ids*
+    # (text token ids, negative content-digest ids for embedding
+    # positions — repro/serving/segments.py), which drive prompt length,
+    # bucket shapes and the paged prefix-cache trie uniformly
+    tokens: np.ndarray | None = None
     max_new_tokens: int = 32
     extra: dict | None = None  # e.g. encoder_frames for whisper
+    # ordered modality spans (TextSegment / EmbedSegment); None = text-only
+    segments: "list | None" = None
     # filled during serving:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
     token_times: list = dataclasses.field(default_factory=list)
+    # derived for multimodal requests: [T, d] float32 embedding rows and
+    # the [T] bool injection mask handed to the model entry points
+    features: np.ndarray | None = dataclasses.field(default=None,
+                                                    repr=False)
+    embed_mask: np.ndarray | None = dataclasses.field(default=None,
+                                                      repr=False)
+
+    def __post_init__(self):
+        if self.segments is None:
+            return
+        self.tokens = sg.key_ids(self.segments)
+        media = sg.media_segments(self.segments)
+        if media:
+            d = np.asarray(media[0].features).shape[-1]
+            self.features, self.embed_mask = sg.dense_features(
+                self.segments, d)
 
     def ttft_s(self) -> float:
         """Time-to-first-token (prefill + queueing), on the engine clock."""
@@ -213,8 +247,35 @@ class ServingEngine:
 
     def _padded_prompt(self, toks: np.ndarray, n_pad: int) -> jnp.ndarray:
         out = np.zeros(n_pad, np.int32)
-        out[:len(toks)] = toks
+        # clamp: embedding positions carry negative int64 key ids for the
+        # prefix trie; the model reads their rows from ``embeds`` instead
+        out[:len(toks)] = np.maximum(toks, 0)
         return jnp.asarray(out)[None]
+
+    def _padded_embeds(self, feats: np.ndarray, mask: np.ndarray,
+                       n_pad: int):
+        """Right-pad a request's embedding rows + mask to the shape bucket
+        (zeros / False: padded positions are already masked everywhere)."""
+        f = np.zeros((n_pad, feats.shape[1]), np.float32)
+        f[:len(feats)] = feats
+        m = np.zeros(n_pad, bool)
+        m[:len(mask)] = mask
+        return jnp.asarray(f)[None], jnp.asarray(m)[None]
+
+    def _with_embeds(self, batch: dict, req: Request, start: int, stop: int,
+                     n_pad: int) -> bool:
+        """Attach the ``[start, stop)`` slice of a multimodal request's
+        embedding rows to a prefill batch; returns whether it did (the
+        flag keys the extra XLA trace variant).  A slice with no
+        embedding positions — a pure-text chunk past the media span, or a
+        suffix whose prefix hit covered the media — stays on the plain
+        token trace."""
+        if req.features is None or not req.embed_mask[start:stop].any():
+            return False
+        e, m = self._padded_embeds(req.features[start:stop],
+                                   req.embed_mask[start:stop], n_pad)
+        batch["embeds"], batch["embed_mask"] = e, m
+        return True
 
     def _admit_dense(self, slot: int, req: Request) -> "int | None":
         """Monolithic (bucketed) prefill into a dense slot; returns the
@@ -225,7 +286,8 @@ class ServingEngine:
                  **(req.extra or {})}
         if self.bucketing:
             batch["length"] = jnp.asarray([T], jnp.int32)
-        self._traced.add(("prefill", Sb))
+        mm = self._with_embeds(batch, req, 0, T, Sb)
+        self._traced.add(("prefill", Sb, mm))
         logits, rc = self._prefill(self.params, batch)
         self._splice(slot, rc, T)
         self.prefill_tokens_computed += T
@@ -351,7 +413,8 @@ class ServingEngine:
                      **(req.extra or {})}
             if self.bucketing:
                 batch["length"] = jnp.asarray([T], jnp.int32)
-            self._traced.add(("prefill", Sb))
+            mm = self._with_embeds(batch, req, 0, T, Sb)
+            self._traced.add(("prefill", Sb, mm))
             logits, rc = self._prefill(self.params, batch)
             sk, sv = rc["k"], rc["v"]  # [L, 1, Sb, Hkv, Dh]
         else:
@@ -363,7 +426,8 @@ class ServingEngine:
             batch = {"tokens": self._padded_prompt(toks[n_reuse:], Sb)}
             if self.bucketing:
                 batch["length"] = jnp.asarray([n_sfx], jnp.int32)
-            self._traced.add(("prefill_sfx", n_reuse, Sb))
+            mm = self._with_embeds(batch, req, n_reuse, T, Sb)
+            self._traced.add(("prefill_sfx", n_reuse, Sb, mm))
             logits, (sk, sv) = self._prefill_sfx(self.params, batch, pk, pv)
         self._scatter_kv(table, np.arange(n_reuse, T), sk, sv, n_sfx)
         if self.prefix_caching:
@@ -424,7 +488,8 @@ class ServingEngine:
             batch["block_tables"] = jnp.asarray(self.tables[slot][None])
         else:
             batch["slot"] = jnp.asarray(slot, jnp.int32)
-        self._traced.add(("prefill_chunk", Cb))
+        mm = self._with_embeds(batch, req, task.done, task.done + n, Cb)
+        self._traced.add(("prefill_chunk", Cb, mm))
         task.logits, self.cache = self._prefill_chunk(
             self.params, self.cache, batch)
         task.done += n
@@ -484,6 +549,18 @@ class ServingEngine:
                     or any(t is not None for t in self.prefill_tasks))
 
     def submit(self, req: Request):
+        if req.tokens is None:
+            raise ValueError(f"request {req.uid}: no tokens or segments")
+        if req.features is not None:
+            if not self.model.supports_embed_spans:
+                raise ValueError(
+                    f"request {req.uid}: embedding-span prompts need an "
+                    f"attention-family model, not {self.model.cfg.name}")
+            if req.features.shape[1] != self.model.cfg.d_model:
+                raise ValueError(
+                    f"request {req.uid}: segment features of dim "
+                    f"{req.features.shape[1]} do not match the model's "
+                    f"d_model={self.model.cfg.d_model}")
         if len(req.tokens) > self.max_seq - 1:
             raise ValueError(
                 f"request {req.uid}: prompt of {len(req.tokens)} tokens "

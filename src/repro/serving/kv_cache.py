@@ -12,7 +12,11 @@ invariants are testable without touching jax:
   * prefix trie     — full prompt blocks are registered under a chained
     hash ``h_j = H(h_{j-1}, tokens[j*bs:(j+1)*bs])``; a later request with
     the same prompt prefix re-uses those pages (refcount++) and skips
-    recomputing their K/V.
+    recomputing their K/V.  ``tokens`` here are the engine's per-position
+    *key ids*: real token ids for text positions, negative
+    content-digest-derived ids for embedding spans
+    (repro/serving/segments.key_ids) — so a repeated image hits the trie
+    like repeated text, while media can never alias a vocab id.
   * LRU eviction    — a registered page whose refcount drops to zero is
     *not* freed: it parks in an LRU so future prefix hits still find it,
     and is evicted (trie entry dropped, page recycled) only when the pool

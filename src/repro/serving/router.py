@@ -23,6 +23,11 @@ traffic drains away.  On top of that:
                            term of that server's latency estimate, so
                            re-routing a conversation to the server that
                            already holds its prefix scores cheaper.
+  * media-aware scoring  — an optional per-(task, server) media predictor
+                           (cost_model.best_split) adds each modality's
+                           cheapest split-point cost — raw-media vs.
+                           compressed-feature uplink bytes plus encode —
+                           to that server's latency estimate.
 """
 from __future__ import annotations
 
@@ -112,7 +117,8 @@ class QLMIORouter:
 
     def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
                  *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
-                 policy=None, prefix_hit_pred=None, prefill_pred=None):
+                 policy=None, prefix_hit_pred=None, prefill_pred=None,
+                 media_pred=None):
         """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
         P(success).  ``policy`` optionally overrides the scoring rule with a
         trained QLMIO agent's argmax.
@@ -126,6 +132,14 @@ class QLMIORouter:
         ``prefill_pred`` from ``cost_model.prefill_s(..., prefill_chunk=N)``
         when the target server runs the bucketed/chunked prefill engine, so
         the discount matches the step-function cost it actually pays.
+
+        ``media_pred(task, server) -> seconds`` optionally adds the
+        per-modality media cost of dispatching this task to that server —
+        typically the *best split point* extra
+        (``cost_model.best_split``: edge-encode + compressed-feature
+        uplink vs. raw-media uplink + destination encode), so servers
+        behind thin links are charged for the bytes the task's media
+        actually puts on them.
         """
         self.servers = servers
         self.milp = milp_pred
@@ -135,6 +149,7 @@ class QLMIORouter:
         self.policy = policy
         self.prefix_hit_pred = prefix_hit_pred
         self.prefill_pred = prefill_pred
+        self.media_pred = media_pred
         self.health = HealthTracker(len(servers))
         self.queue_s = np.zeros(len(servers))
         self.now = 0.0
@@ -170,6 +185,9 @@ class QLMIORouter:
         """
         n = len(self.servers)
         t_hat = np.array([self.milp(task, s) for s in range(n)])
+        if self.media_pred is not None:
+            t_hat = t_hat + np.maximum(
+                [self.media_pred(task, s) for s in range(n)], 0.0)
         if self.prefix_hit_pred is not None and self.prefill_pred is not None:
             hit = np.clip([self.prefix_hit_pred(task, s) for s in range(n)],
                           0.0, 1.0)

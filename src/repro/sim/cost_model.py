@@ -69,8 +69,33 @@ DEVICE_IDS = list(DEVICES)
 _QUALITY_SLOPE = 5.5
 _COT_BASE = 90.0  # base answer tokens
 _COT_SCALE = 2800.0  # extra CoT tokens at (difficulty - capability) = 1
-_PAYLOAD = 300e3  # image + prompt bytes
 _EFF = 0.35  # achieved fraction of peak
+
+# per-modality raw uplink payloads (bytes).  text + image reproduce the
+# historical single 300 KB constant, so every calibrated Fig. 1 aggregate
+# is unchanged; audio ~ 15 s of 16 kHz 16-bit PCM.
+PAYLOAD_BYTES = {"text": 2e3, "image": 298e3, "audio": 480e3}
+
+
+def payload_bytes(modalities=("text", "image")) -> float:
+    """Total raw uplink bytes for a request carrying ``modalities``."""
+    return float(sum(PAYLOAD_BYTES[m] for m in modalities))
+
+
+_PAYLOAD = payload_bytes()  # legacy default: text prompt + one image
+
+
+def uplink_s(nbytes, device: DeviceProfile):
+    """One-way user->server link delay for ``nbytes`` of payload.  The
+    single link-delay formula shared by the analytic latency model and the
+    live continuum harness (serving/cluster.EngineHandle) — previously
+    each computed its own."""
+    return np.asarray(nbytes, float) / device.net_bw + device.rtt / 2
+
+
+def downlink_s(nbytes, device: DeviceProfile):
+    """One-way server->user link delay (same roofline, response bytes)."""
+    return uplink_s(nbytes, device)
 
 
 _PREFILL_MIN_BUCKET = 16  # mirrors ServingEngine's min_bucket default
@@ -143,7 +168,9 @@ def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
         out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))
     decode = out_tok * model.n_active * model.bytes_per_param / (
         device.mem_bw * _EFF)
-    trans = _PAYLOAD / device.net_bw + device.rtt
+    # request up + (byte-free) response down == payload/bw + rtt, the
+    # historical transmission term
+    trans = uplink_s(_PAYLOAD, device) + downlink_s(0.0, device)
     return prefill + decode + trans
 
 
@@ -151,6 +178,74 @@ def success_prob(model: ModelProfile, difficulty, affinity=0.0) -> np.ndarray:
     z = _QUALITY_SLOPE * (model.capability - np.asarray(difficulty)
                           + affinity) - 0.5
     return 1.0 / (1.0 + np.exp(-z))
+
+
+# --------------------------------------------------- split-point offloading
+#
+# A multimodal request can cross the cloud-edge boundary at two points
+# (MoA-Off / CE-CoLLM): ship the *raw* media over the uplink and encode at
+# the destination server, or run the modality encoder on the source edge
+# device and ship the (keep-top-k compressed) *features*.  Everything the
+# decision needs is a roofline: encoder FLOPs on either device plus the
+# per-modality uplink bytes of whichever representation travels.
+
+
+@dataclasses.dataclass(frozen=True)
+class MediaSpec:
+    """Cost-model view of one media input (paper-scale encoder dims, so
+    the decision operates at profiled-hardware magnitudes regardless of
+    the reduced live encoder actually producing the features)."""
+
+    modality: str  # key into PAYLOAD_BYTES
+    raw_bytes: float  # raw media over the uplink
+    feature_bytes: float  # encoded (compressed) features over the uplink
+    encode_tokens: int  # patches / frames through the encoder
+    encode_dim: int = 768  # ViT-B-ish trunk
+    encode_layers: int = 12
+    encode_ff: int = 3072
+
+
+def media_spec(modality: str, keep_ratio: float = 1.0) -> MediaSpec:
+    """Paper-scale spec per modality; ``keep_ratio`` is the keep-top-k
+    pooling knob (models/mm_encoder.py) scaling the kept span and with it
+    the feature-uplink bytes (bf16 features)."""
+    tokens = {"image": 197, "audio": 1500}[modality]  # ViT-B/16, whisper
+    kept = max(1, int(np.ceil(keep_ratio * tokens)))
+    return MediaSpec(modality, raw_bytes=PAYLOAD_BYTES[modality],
+                     feature_bytes=kept * 768 * 2, encode_tokens=tokens)
+
+
+def mm_encode_s(device: DeviceProfile, spec: MediaSpec):
+    """Roofline seconds to run the modality encoder on ``device``."""
+    d, ff = spec.encode_dim, spec.encode_ff
+    flops = spec.encode_tokens * spec.encode_layers * (8 * d * d
+                                                       + 4 * d * ff)
+    return flops / (device.flops * _EFF)
+
+
+def split_point_s(spec: MediaSpec, src: DeviceProfile,
+                  dst: DeviceProfile) -> dict:
+    """Extra seconds (beyond the text payload) each split choice costs:
+    ``raw`` ships the media and encodes at the destination, ``edge``
+    encodes at the source and ships compressed features over the
+    destination's link.  Pure serialization + encode: the link RTT is
+    already paid once by the request itself, whichever form the media
+    rides along in."""
+    return {
+        "raw": float(spec.raw_bytes / dst.net_bw + mm_encode_s(dst, spec)),
+        "edge": float(mm_encode_s(src, spec)
+                      + spec.feature_bytes / dst.net_bw),
+    }
+
+
+def best_split(spec: MediaSpec, src: DeviceProfile,
+               dst: DeviceProfile) -> "tuple[str, float]":
+    """(choice, extra_s): the cheaper of raw-ship vs edge-encode.  Slow
+    uplinks favor edge encoding (features are smaller than media); fast
+    uplinks with a weak source device favor shipping raw."""
+    costs = split_point_s(spec, src, dst)
+    choice = min(costs, key=costs.get)
+    return choice, costs[choice]
 
 
 def category_affinity(n_categories: int, n_models: int, seed: int = 7):

@@ -1,0 +1,240 @@
+"""Modality-aware request path: embedding-span prefill parity with the
+token path, prefix-cache hits on repeated media segments, the mm encoder's
+keep-top-k compression, and the split-point offloading decision."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models import lm
+from repro.models.mm_encoder import (MMEncoderConfig, encode_audio,
+                                     encode_image, init_mm_encoder,
+                                     keep_top_k)
+from repro.serving import segments as sg
+from repro.serving.engine import Request, ServingEngine
+from repro.sim import cost_model as cm
+
+
+def _rng(seed=5):
+    return np.random.default_rng(seed)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _token_embeds(cfg, params, toks):
+    """Host copy of the token-table rows a text span would embed to."""
+    return np.asarray(lm.embed_tokens(cfg, params, jnp.asarray(toks)),
+                      np.float32)
+
+
+# ------------------------------------------------------------ segments
+
+
+def test_key_ids_and_digests():
+    toks = np.array([3, 7, 11], np.int32)
+    feats = _rng().normal(size=(4, 8)).astype(np.float32)
+    segs = [sg.EmbedSegment(feats), sg.TextSegment(toks)]
+    ids = sg.key_ids(segs)
+    assert ids.dtype == np.int64 and len(ids) == 7
+    assert (ids[:4] < 0).all()  # media never aliases a vocab id
+    assert np.array_equal(ids[4:], toks)
+    # content-determined: same features -> same ids; different -> disjoint
+    ids2 = sg.key_ids([sg.EmbedSegment(feats.copy()), sg.TextSegment(toks)])
+    assert np.array_equal(ids, ids2)
+    other = sg.key_ids([sg.EmbedSegment(feats + 1.0)])
+    assert not np.intersect1d(ids[:4], other).size
+    dense, mask = sg.dense_features(segs, 8)
+    assert mask.tolist() == [True] * 4 + [False] * 3
+    np.testing.assert_array_equal(dense[:4], feats)
+    with pytest.raises(ValueError):
+        sg.dense_features(segs, 16)  # d_model mismatch
+
+
+# ------------------------------------------------- token/embeds parity
+
+
+def test_embed_prefill_parity_monolithic(qwen):
+    """Same tokens through the embeds entry -> bit-identical logits."""
+    cfg, model, params = qwen
+    toks = _rng(7).integers(0, cfg.vocab, 12).astype(np.int32)
+    logits_t, _ = model.prefill(params, {"tokens": jnp.asarray(toks)[None]})
+    emb = _token_embeds(cfg, params, toks)
+    logits_e, _ = model.prefill(params, {
+        "tokens": jnp.asarray(toks)[None],
+        "embeds": jnp.asarray(emb)[None],
+        "embed_mask": jnp.ones((1, len(toks)), bool)})
+    assert jnp.array_equal(logits_t, logits_e)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_embed_span_engine_parity(qwen, paged):
+    """A request whose leading span is injected as *embeddings of the same
+    tokens* must generate exactly what the plain token request generates —
+    through the engine's bucketed + chunked prefill on both backends."""
+    cfg, model, params = qwen
+    toks = _rng(3).integers(0, cfg.vocab, 20).astype(np.int32)
+    kw = dict(max_batch=2, max_seq=64, paged=paged, prefill_chunk=8)
+    if paged:
+        kw["page_size"] = 4
+
+    eng_t = ServingEngine(model, params, **kw)
+    req_t = Request(0, toks.copy(), max_new_tokens=4)
+    eng_t.submit(req_t)
+    eng_t.run_until_drained()
+
+    emb = _token_embeds(cfg, params, toks[:9])
+    segs = [sg.EmbedSegment(emb, modality="image"),
+            sg.TextSegment(toks[9:])]
+    eng_e = ServingEngine(model, params, **kw)
+    req_e = Request(1, segments=segs, max_new_tokens=4)
+    eng_e.submit(req_e)
+    eng_e.run_until_drained()
+    assert req_e.output == req_t.output
+
+
+def test_non_attention_family_rejects_embed_spans():
+    cfg = reduced(get_config("zamba2-2.7b"))
+    model = build_model(cfg)
+    assert not model.supports_embed_spans
+    with pytest.raises(ValueError, match="embedding-span"):
+        model.prefill(None, {"tokens": jnp.zeros((1, 4), jnp.int32),
+                             "embeds": jnp.zeros((1, 4, cfg.d_model)),
+                             "embed_mask": jnp.zeros((1, 4), bool)})
+
+
+def test_engine_rejects_mismatched_feature_dim(qwen):
+    cfg, model, params = qwen
+    eng = ServingEngine(model, params, max_batch=1, max_seq=64)
+    bad = [sg.EmbedSegment(np.zeros((3, cfg.d_model + 1), np.float32))]
+    with pytest.raises(ValueError, match="d_model"):
+        eng.submit(Request(0, segments=bad))
+
+
+# ------------------------------------------------- prefix cache on media
+
+
+def test_prefix_cache_hit_repeated_image_segment(qwen):
+    """Two requests carrying the same image share its KV pages; a
+    different image misses."""
+    cfg, model, params = qwen
+    rng = _rng(9)
+    img = rng.normal(size=(8, cfg.d_model)).astype(np.float32)
+    tail1 = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    tail2 = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64,
+                        page_size=4, prefill_chunk=8)
+    eng.submit(Request(0, segments=[sg.EmbedSegment(img),
+                                    sg.TextSegment(tail1)],
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.prefix_tokens_reused == 0
+    eng.submit(Request(1, segments=[sg.EmbedSegment(img.copy()),
+                                    sg.TextSegment(tail2)],
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    # the image spans two full pages; both are served from the trie
+    assert eng.prefix_tokens_reused == 8
+    assert eng.pool.hits >= 2
+    hits_before = eng.pool.hits
+    other = rng.normal(size=(8, cfg.d_model)).astype(np.float32)
+    eng.submit(Request(2, segments=[sg.EmbedSegment(other),
+                                    sg.TextSegment(tail1)],
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.pool.hits == hits_before  # different image: no reuse
+
+
+# ------------------------------------------------------------ mm encoder
+
+
+def test_mm_encoder_shapes_and_keep_top_k():
+    cfg = MMEncoderConfig(d_model=32, img_size=32, patch=8, audio_dim=8,
+                          n_layers=1, n_heads=2, d_ff=64, keep_ratio=0.5)
+    params = init_mm_encoder(cfg, jax.random.PRNGKey(1))
+    rng = _rng(2)
+    img = jnp.asarray(rng.random((2, 32, 32, 3)), jnp.float32)
+    f = encode_image(cfg, params, img)
+    assert f.shape == (2, 8, 32)  # 16 patches, keep 8
+    assert jnp.array_equal(f, encode_image(cfg, params, img))  # determinism
+    au = jnp.asarray(rng.random((1, 10, 8)), jnp.float32)
+    assert encode_audio(cfg, params, au).shape == (1, 5, 32)
+    # keep_top_k keeps the highest-norm rows in original order
+    x = jnp.asarray([[[1.0, 0], [9, 0], [0, 0.5], [0, 4]]])
+    kept = keep_top_k(x, 2)
+    np.testing.assert_array_equal(np.asarray(kept),
+                                  [[[9.0, 0], [0, 4]]])
+
+
+# ------------------------------------------------------- split decision
+
+
+def test_split_point_decision_regression():
+    """Slow uplink -> edge-encode wins (features are smaller than media);
+    fast uplink + weak edge device -> raw-ship wins (the server encodes
+    much faster than the source)."""
+    spec = cm.media_spec("image", keep_ratio=1 / 3)
+    assert spec.feature_bytes < spec.raw_bytes  # else nothing to trade
+    edge_dev = cm.DeviceProfile("src", 3e12, 30e9, 12.5e6, 0.004)
+    cloud = cm.DeviceProfile("cloud", 300e12, 1.5e12, 1e6, 0.03)  # thin WAN
+    lan = cm.DeviceProfile("lan", 120e12, 800e9, 50e6, 0.004)  # fat LAN
+    choice, _ = cm.best_split(spec, edge_dev, cloud)
+    assert choice == "edge"
+    choice, _ = cm.best_split(spec, edge_dev, lan)
+    assert choice == "raw"
+    # costs are consistent with the forced-choice table
+    costs = cm.split_point_s(spec, edge_dev, cloud)
+    assert costs["edge"] == cm.best_split(spec, edge_dev, cloud)[1]
+    assert costs["raw"] > costs["edge"]
+
+
+def test_router_media_pred_shifts_routing():
+    """The per-modality media term is folded into the router's latency
+    scores: a server behind a thin link loses a task whose media is
+    expensive to ship there, and routing is unchanged for media-free
+    predictions."""
+    from repro.serving.router import QLMIORouter, ServerHandle
+
+    handles = [ServerHandle(f"s{i}", 0, 0, i == 0, execute=lambda t: (1, 1))
+               for i in range(2)]
+    milp = lambda task, s: 1.0  # latency-equal servers
+    mgqp = lambda task, s: 0.9
+    spec = cm.media_spec("image", keep_ratio=1 / 3)
+    src = cm.DeviceProfile("src", 3e12, 30e9, 12.5e6, 0.004)
+    devs = [cm.DeviceProfile("thin", 300e12, 1.5e12, 0.2e6, 0.03),
+            cm.DeviceProfile("fat", 120e12, 800e9, 50e6, 0.004)]
+    media = lambda task, s: cm.best_split(spec, src, devs[s])[1]
+    assert media(0, 0) > media(0, 1) + 0.5  # thin link is markedly worse
+
+    r = QLMIORouter(handles, milp, mgqp, media_pred=media)
+    assert r.route(0) == 1
+    r0 = QLMIORouter(handles, milp, mgqp)  # no media term: tie -> argmax 0
+    assert r0.route(0) == 0
+    # the media term lands additively in the effective latency
+    np.testing.assert_allclose(
+        r._effective_latency(0), [1.0 + media(0, 0), 1.0 + media(0, 1)])
+
+
+def test_uplink_helper_shared_with_cluster():
+    """The analytic model and the live EngineHandle price the link through
+    the same helper (no more separately-maintained formulas)."""
+    from repro.serving.cluster import EngineHandle
+    dev = cm.DEVICES["rtx3090ti"]
+    h = EngineHandle("edge-0", "qwen2-0.5b", dev, cm.MODELS["qwen3vl-8b"],
+                     payload_bytes=300e3)
+    assert h.uplink_s() == pytest.approx(
+        float(cm.uplink_s(150e3, dev)))
+    assert h.uplink_s() + h.downlink_s() == pytest.approx(
+        300e3 / dev.net_bw + dev.rtt)
+    # the handle answers the split-point question from the cost model
+    spec = cm.media_spec("image", keep_ratio=1 / 3)
+    src = cm.DeviceProfile("src", 3e12, 30e9, 12.5e6, 0.004)
+    choice, extra = h.split_point(spec, src)
+    assert (choice, extra) == cm.best_split(spec, src, dev)
+    assert h.split_delay_s(spec, src, choice) == extra
