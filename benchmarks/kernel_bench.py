@@ -25,6 +25,7 @@ from benchmarks.common import emit
 
 from repro.kernels import ops, ref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.serving.kv_cache import kv_token_bytes
 
 
 def _roof(flops, bytes_):
@@ -55,6 +56,7 @@ def serving_prefill_bench():
     prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
     modes = {
         "chunked": dict(prefill_chunk=16),          # the fix (default path)
+        "chunked_int8": dict(prefill_chunk=16, kv_dtype="int8"),
         "bucketed_monolithic": dict(prefill_chunk=0),
         "legacy": dict(prefill_chunk=0, bucket_prompts=False),
     }
@@ -90,31 +92,56 @@ def serving_prefill_bench():
 def paged_kv_bench():
     """KV memory footprint + decode throughput (analytic, deterministic):
     dense pads every slot to max_seq while the paged pool sizes to the
-    workload's live tokens.  Workload: 8 slots, lengths 0.5-8k, max_seq
-    8k, L=32 layers of the flash-decode shape used in ``run``."""
+    workload's live tokens, and the int8 pool (kv_dtype="int8": symmetric
+    per-row int8 values + fp32 scales, repro/kernels/quant.py) carries
+    ``Dh + 4`` bytes per head row against bf16's ``2 * Dh`` — halving the
+    per-tick decode KV stream *and* the pool footprint.  Workload: 8
+    slots, lengths 0.5-8k, max_seq 8k, L=32 layers of the flash-decode
+    shape used in ``run``."""
     H, Hkv, D, bs_pg = 8, 2, 128, 64
     L, max_seq = 32, 8192
     lens = [512, 1024, 1536, 2048, 3072, 4096, 6144, 8192]
-    tok_bytes = Hkv * D * 2 * 2 * L  # K+V bf16, all layers
+    tok_bytes = kv_token_bytes(L, Hkv, D, "bf16")  # K+V bf16, all layers
+    tok_bytes_i8 = kv_token_bytes(L, Hkv, D, "int8")
+    layer_bytes = kv_token_bytes(1, Hkv, D, "bf16")  # decode streams 1 layer
+    layer_bytes_i8 = kv_token_bytes(1, Hkv, D, "int8")
     dense_bytes = len(lens) * max_seq * tok_bytes
     paged_pages = sum(-(-n // bs_pg) for n in lens)
     paged_bytes = (1 + paged_pages) * bs_pg * tok_bytes
+    int8_bytes = (1 + paged_pages) * bs_pg * tok_bytes_i8
     dense_step_s = _roof(2 * 2 * H * D * sum(lens),
-                         sum(max_seq for _ in lens) * Hkv * D * 2 * 2)
+                         sum(max_seq for _ in lens) * layer_bytes)
     paged_step_s = _roof(2 * 2 * H * D * sum(lens),
-                         sum(lens) * Hkv * D * 2 * 2)
+                         sum(lens) * layer_bytes)
+    int8_step_s = _roof(2 * 2 * H * D * sum(lens),
+                        sum(lens) * layer_bytes_i8)
     print("paged_kv,metric,dense,paged,ratio")
     print(f"paged_kv,kv_bytes_per_layer_stack,{dense_bytes},{paged_bytes},"
           f"{dense_bytes / paged_bytes:.2f}")
     print(f"paged_kv,decode_roofline_tok_s,{len(lens) / dense_step_s:.0f},"
           f"{len(lens) / paged_step_s:.0f},"
           f"{dense_step_s / paged_step_s:.2f}")
+    print("paged_kv,metric,bf16,int8,ratio")
+    print(f"paged_kv,kv_bytes_per_token,{tok_bytes},{tok_bytes_i8},"
+          f"{tok_bytes / tok_bytes_i8:.2f}")
+    print(f"paged_kv,int8_decode_roofline_tok_s,"
+          f"{len(lens) / paged_step_s:.0f},{len(lens) / int8_step_s:.0f},"
+          f"{paged_step_s / int8_step_s:.2f}")
     return emit("paged_kv_memory", {
         "workload_lens": lens, "max_seq": max_seq, "block_size": bs_pg,
         "dense_kv_bytes": dense_bytes, "paged_kv_bytes": paged_bytes,
         "memory_ratio": dense_bytes / paged_bytes,
         "dense_decode_tok_s": len(lens) / dense_step_s,
         "paged_decode_tok_s": len(lens) / paged_step_s,
+        "int8": {
+            "kv_bytes_per_token_bf16": tok_bytes,
+            "kv_bytes_per_token_int8": tok_bytes_i8,
+            "kv_bytes_per_token_ratio": tok_bytes / tok_bytes_i8,
+            "pool_bytes_int8": int8_bytes,
+            "pool_bytes_ratio": paged_bytes / int8_bytes,
+            "decode_tok_s": len(lens) / int8_step_s,
+            "decode_tok_s_ratio": paged_step_s / int8_step_s,
+        },
     })
 
 
@@ -172,6 +199,21 @@ def run():
     paged_roof = _roof(flops, byts)
     rows.append(("paged_decode", f"B{B}xS{S2}xH{H}xbs{bs_pg}", err,
                  paged_roof, time.time() - t0))
+
+    # fused-dequant paged decode: pages stay int8 in HBM (half the KV
+    # stream), per-row fp32 scales ride as extra VMEM operands
+    from repro.kernels.quant import quantize_kv
+    kp8, kps = quantize_kv(kp)
+    vp8, vps = quantize_kv(vp)
+    t0 = time.time()
+    o = ops.paged_decode_quant(q1, kp8, vp8, kps, vps, bt, pos)
+    err = float(jnp.max(jnp.abs(
+        o.astype(jnp.float32)
+        - ref.paged_decode_quant_ref(q1, kp8, vp8, kps, vps, bt,
+                                     pos).astype(jnp.float32))))
+    byts_i8 = B * S2 * kv_token_bytes(1, Hkv, D, "int8")
+    rows.append(("paged_decode_int8", f"B{B}xS{S2}xH{H}xbs{bs_pg}", err,
+                 _roof(flops, byts_i8), time.time() - t0))
 
     paged = paged_kv_bench()
 

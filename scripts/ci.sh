@@ -27,7 +27,9 @@ python -m pytest -x -q
 python scripts/smoke_decode.py
 
 # serving prefill smoke + benchmark regression gate: TTFT/ITL p95, prefill
-# trace counts and paged-decode throughput vs. benchmarks/baseline.json
+# trace counts, paged-decode throughput and the int8-KV sections
+# (paged_kv.int8 bytes/token + throughput, serving.chunked_int8 run) vs.
+# benchmarks/baseline.json; the JSON is uploaded as a CI artifact
 mkdir -p results
 PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py \
     serving paged_kv --json results/bench.json

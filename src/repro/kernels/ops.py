@@ -9,9 +9,11 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.flash_decode import flash_decode_quant_tpu
 from repro.kernels.flash_decode import flash_decode_tpu
 from repro.kernels.mamba2_scan import ssd_scan_tpu
 from repro.kernels.moe_gmm import grouped_matmul_tpu
+from repro.kernels.paged_decode import paged_decode_quant_tpu
 from repro.kernels.paged_decode import paged_decode_tpu
 from repro.kernels.rmsnorm import rmsnorm_tpu
 
@@ -33,6 +35,20 @@ def flash_decode(q, k_cache, v_cache, cache_positions, pos, **kw):
 def paged_decode(q, k_pages, v_pages, block_tables, pos, **kw):
     kw.setdefault("interpret", _interpret())
     return paged_decode_tpu(q, k_pages, v_pages, block_tables, pos, **kw)
+
+
+def flash_decode_quant(q, k_cache, v_cache, k_scales, v_scales,
+                       cache_positions, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return flash_decode_quant_tpu(q, k_cache, v_cache, k_scales, v_scales,
+                                  cache_positions, pos, **kw)
+
+
+def paged_decode_quant(q, k_pages, v_pages, k_scales, v_scales,
+                       block_tables, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return paged_decode_quant_tpu(q, k_pages, v_pages, k_scales, v_scales,
+                                  block_tables, pos, **kw)
 
 
 def ssd_scan(x, dt, a_neg, B, C, **kw):

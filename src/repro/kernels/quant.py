@@ -1,0 +1,53 @@
+"""Symmetric int8 quantization for the paged/dense KV caches.
+
+K/V rows are quantized **per token position, per kv head** over the head
+dim: ``scale = absmax(row) / 127`` (fp32), ``q = round(row / scale)`` in
+``[-127, 127]``.  The scales ride alongside the page pool / cache as an
+extra tensor whose layout mirrors the K/V layout minus the head dim
+(``[..., Hkv, Dh] int8`` + ``[..., Hkv] float32``), so every piece of
+bookkeeping that moves pages (copy-on-write, eviction, prefix-trie reuse,
+block-table gathers) moves the scale rows with the same indices.
+
+Row-wise symmetric absmax is the standard serving-time KV recipe (vLLM
+fp8/int8 KV, saxml int8 caches): zero-point-free dequant is a single
+multiply that fuses into the attention kernel's K/V load, and quantizing
+at write time (one row per decode tick, one chunk per prefill call) never
+needs to rescale data already resident in the pool — unlike a true
+per-page scale, which would have to re-quantize the whole page whenever a
+newly appended token raised its absmax.
+
+Dequantization happens in-registers inside the Pallas decode kernels
+(``paged_decode.paged_decode_quant_tpu`` / ``flash_decode.
+flash_decode_quant_tpu``): pages stay int8 in HBM — the ~2x HBM-traffic
+reduction is the point — and the fp32 flash-softmax accumulation is
+unchanged, so quantization error is bounded by the int8 rounding of K and
+V alone (<= absmax/254 per element).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_kv(x, axis: int = -1):
+    """Symmetric per-row int8 quantization over ``axis`` (the head dim).
+
+    Returns ``(q, scales)``: ``q`` has ``x``'s shape in int8, ``scales``
+    drops ``axis`` and is float32.  All-zero rows get scale 1.0 so the
+    round-trip stays exact (and the null page's garbage scales are
+    harmless — masked rows are never read).
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    bound = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.where(bound > 0.0, bound / INT8_MAX, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis)
+
+
+def dequantize_kv(q, scales, axis: int = -1, dtype=jnp.float32):
+    """Inverse of ``quantize_kv``: broadcast the scale row back over
+    ``axis``.  fp32 by default — the XLA fallback attention paths then
+    contract exactly what the fused kernels compute in-registers."""
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scales.astype(jnp.float32), axis)).astype(dtype)

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import decode_attention as _decode_ref
+from repro.models.attention import decode_attention_quant as _decode_q_ref
 from repro.models.attention import paged_decode_attention as _paged_ref
+from repro.models.attention import (
+    paged_decode_attention_quant as _paged_q_ref,
+)
 from repro.models.attention import reference_attention
 
 
@@ -21,6 +25,21 @@ def flash_decode_ref(q, k_cache, v_cache, cache_positions, pos, *, window=0):
 def paged_decode_ref(q, k_pages, v_pages, block_tables, pos, *, window=0):
     """Gather-through-block-table oracle (and the engine's CPU fallback)."""
     return _paged_ref(q, k_pages, v_pages, block_tables, pos, window=window)
+
+
+def flash_decode_quant_ref(q, k_cache, v_cache, k_scales, v_scales,
+                           cache_positions, pos, *, window=0):
+    """Dequantize-then-attend oracle for the fused int8 flash decode."""
+    return _decode_q_ref(q, k_cache, v_cache, k_scales, v_scales,
+                         cache_positions, pos, window=window)
+
+
+def paged_decode_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                           block_tables, pos, *, window=0):
+    """Dequantize-then-gather oracle for the fused int8 paged decode (and
+    the quantized engine's CPU fallback)."""
+    return _paged_q_ref(q, k_pages, v_pages, k_scales, v_scales,
+                        block_tables, pos, window=window)
 
 
 def ssd_scan_ref(x, dt, a_neg, B, C):

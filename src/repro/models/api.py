@@ -9,6 +9,8 @@ Cache layouts (stacked over layers so every step is a scan):
   attn:    k,v [L,B,Sa,Hkv,Dh] bf16; pos_map [B,Sa] int32 (-1 = empty)
   paged:   k_pages,v_pages [L,P,bs,Hkv,Dh] bf16 + per-slot block tables
            [B,NB] int32 (page id per bs-token logical block, -1 = empty);
+           kv_dtype="int8" stores the pools int8 with fp32 row scales
+           k_scales,v_scales [L,P,bs,Hkv] alongside (kernels/quant.py);
            see repro/serving/kv_cache.py for the pool/prefix-trie side
   zamba2:  conv [G,P,B,W-1,Ch], ssm [G,P,B,nh,hd,N] fp32, shared-attn KV [G,...]
   xlstm:   per-block (conv, C, n, m) for mLSTM; (c, n, m, h) for sLSTM
@@ -27,11 +29,14 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import lm
 from repro.models import mamba2 as m2
 from repro.models import xlstm as xl
-from repro.kernels.paged_decode import paged_decode_tpu
+from repro.kernels.paged_decode import paged_decode_quant_tpu, paged_decode_tpu
+from repro.kernels.quant import quantize_kv
 from repro.models.attention import (chunk_prefill_attention, decode_attention,
                                     flash_attention,
                                     paged_chunk_prefill_attention,
-                                    paged_decode_attention)
+                                    paged_chunk_prefill_attention_quant,
+                                    paged_decode_attention,
+                                    paged_decode_attention_quant)
 from repro.nn.layers import apply_rope
 from repro.nn.spec import abstract_params, init_params
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -156,13 +161,30 @@ class Model:
         serving (either cache backend works; the *family* is what gates)."""
         return self.supports_paged
 
-    def abstract_paged_cache(self, num_pages: int, block_size: int):
+    def abstract_paged_cache(self, num_pages: int, block_size: int,
+                             kv_dtype: str = "bf16"):
         """Paged layout: K/V pages shared across the batch, addressed by a
-        per-slot block table instead of a dense [B, max_seq] region."""
+        per-slot block table instead of a dense [B, max_seq] region.
+
+        ``kv_dtype="int8"`` stores the pages quantized (symmetric per-row
+        int8, repro/kernels/quant.py) with fp32 scale tensors riding
+        alongside the pools — ``k_scales``/``v_scales`` [L, P, bs, Hkv]
+        share the page axis, so page-id bookkeeping (copy-on-write,
+        eviction, prefix reuse) moves scales and values together.  Halves
+        KV bytes per token and roughly doubles the page budget a fixed
+        HBM allowance buys (see ServingEngine ``kv_budget_bytes``)."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(f"{cfg.name}: paged KV cache needs attn family")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
         shape = (cfg.n_layers, num_pages, block_size, cfg.n_kv_heads, cfg.hd)
+        if kv_dtype == "int8":
+            return {"k_pages": _sds(shape, jnp.int8),
+                    "v_pages": _sds(shape, jnp.int8),
+                    "k_scales": _sds(shape[:-1], jnp.float32),
+                    "v_scales": _sds(shape[:-1], jnp.float32)}
         return {"k_pages": _sds(shape, jnp.bfloat16),
                 "v_pages": _sds(shape, jnp.bfloat16)}
 
@@ -337,68 +359,67 @@ class Model:
             o = lm._norm(pl, o, cfg.norm, "pn1")
         return lm._ffn(pl, cfg, x + o), kv
 
-    def _attn_decode_scan(self, params, x, pos, k_all, v_all, rope_len,
+    def _attn_decode_scan(self, params, x, pos, kv_all, rope_len,
                           attend, layer_fn=None):
         """Layer-scan driver shared by the dense and paged decode paths
         (``layer_fn=_decode_layer``, the default) and their chunked-prefill
         counterparts (``layer_fn=_chunk_layer``; x/pos then carry a C-token
         chunk dim).
 
-        ``k_all``/``v_all`` are per-layer cache leaves stacked on dim 0
-        ([L, B, Sa, ...] dense, [L, P, bs, ...] paged); returns
-        (hidden, k_new, v_new) with the same stacking.
+        ``kv_all`` is a tuple of per-layer cache leaves stacked on dim 0:
+        ``(k, v)`` ([L, B, Sa, ...] dense, [L, P, bs, ...] paged), plus
+        ``(k_scales, v_scales)`` for the int8 page pool — the driver
+        threads the tuple opaquely (``attend`` owns its meaning), so every
+        cache precision shares one scan.  Returns ``(hidden, kv_new)``
+        with the same stacking and arity.
         """
         cfg = self.cfg
         layer_fn = layer_fn or self._decode_layer
         rope_l, rope_g = lm._rope_tables(cfg, rope_len)
+        kv_all = tuple(kv_all)
 
         if cfg.attn_pattern != "local_global":
             def body(x, xs):
-                pl, kc, vc = xs
-                y, (kc, vc) = layer_fn(pl, x, (kc, vc), pos,
-                                       rope_g, 0, attend)
-                return y, (kc, vc)
+                y, kv = layer_fn(xs[0], x, xs[1:], pos, rope_g, 0, attend)
+                return y, tuple(kv)
 
-            x, (k_new, v_new) = jax.lax.scan(
-                body, x, (params["layers"], k_all, v_all))
-            return x, k_new, v_new
+            x, kv_new = jax.lax.scan(
+                body, x, (params["layers"],) + kv_all)
+            return x, tuple(kv_new)
 
         grouped, tail, G, P_, n_tail = lm._regroup_layers(
             cfg, params["layers"])
         n_full = G * P_
-        kg = k_all[:n_full].reshape((G, P_) + k_all.shape[1:])
-        vg = v_all[:n_full].reshape((G, P_) + v_all.shape[1:])
+        kv_g = tuple(a[:n_full].reshape((G, P_) + a.shape[1:])
+                     for a in kv_all)
 
         def gbody(x, xs):
-            pg, kcs, vcs = xs
-            ks, vs = [], []
+            pg = xs[0]
+            outs = []
             for idx in range(P_):
                 pl = jax.tree.map(lambda a: a[idx], pg)
                 is_g = idx == P_ - 1
-                x, (kc, vc) = layer_fn(
-                    pl, x, (kcs[idx], vcs[idx]), pos,
+                x, kv = layer_fn(
+                    pl, x, tuple(c[idx] for c in xs[1:]), pos,
                     rope_g if is_g else rope_l,
                     0 if is_g else cfg.window, attend)
-                ks.append(kc)
-                vs.append(vc)
-            return x, (jnp.stack(ks), jnp.stack(vs))
+                outs.append(kv)
+            return x, tuple(jnp.stack([o[i] for o in outs])
+                            for i in range(len(kv_all)))
 
-        x, (kg_new, vg_new) = jax.lax.scan(gbody, x, (grouped, kg, vg))
-        tail_k, tail_v = [], []
+        x, kv_g_new = jax.lax.scan(gbody, x, (grouped,) + kv_g)
+        tail_new = []
         for t in range(n_tail):
             pl = jax.tree.map(lambda a: a[t], tail)
-            x, (kc, vc) = layer_fn(
-                pl, x, (k_all[n_full + t], v_all[n_full + t]),
+            x, kv = layer_fn(
+                pl, x, tuple(a[n_full + t] for a in kv_all),
                 pos, rope_l, cfg.window, attend)
-            tail_k.append(kc)
-            tail_v.append(vc)
-        k_new = jnp.concatenate(
-            [kg_new.reshape((n_full,) + kg_new.shape[2:])]
-            + [kk[None] for kk in tail_k], 0)
-        v_new = jnp.concatenate(
-            [vg_new.reshape((n_full,) + vg_new.shape[2:])]
-            + [vv[None] for vv in tail_v], 0)
-        return x, k_new, v_new
+            tail_new.append(kv)
+        kv_new = tuple(
+            jnp.concatenate([g.reshape((n_full,) + g.shape[2:])]
+                            + [kv[i][None] for kv in tail_new], 0)
+            for i, g in enumerate(kv_g_new))
+        return x, kv_new
 
     def _attn_decode(self, params, cache, x, pos):
         cfg = self.cfg
@@ -414,8 +435,8 @@ class Model:
                                  repeat_kv=cfg.decode_repeat_kv)
             return o, (kc, vc)
 
-        x, k_new, v_new = self._attn_decode_scan(
-            params, x, pos, cache["k"], cache["v"], Sa, attend)
+        x, (k_new, v_new) = self._attn_decode_scan(
+            params, x, pos, (cache["k"], cache["v"]), Sa, attend)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x)
         return logits, {"k": k_new, "v": v_new, "pos_map": pos_map}
@@ -423,13 +444,20 @@ class Model:
     def serve_step_paged(self, params, cache, batch):
         """One token for the whole batch against the paged KV cache.
 
-        cache  = {k_pages, v_pages [L, P, bs, Hkv, Dh]}
+        cache  = {k_pages, v_pages [L, P, bs, Hkv, Dh]} — bf16 pools — or
+                 the int8 layout with ``k_scales``/``v_scales``
+                 [L, P, bs, Hkv] fp32 alongside (``abstract_paged_cache``
+                 with ``kv_dtype="int8"``); the cache's own leaves select
+                 the path, so the engine just passes its pool through.
         batch  = {tokens [B], pos [B], block_tables [B, NB] int32}
 
         Block table entry ``[b, j]`` is the physical page holding positions
         ``[j*bs, (j+1)*bs)`` of slot b, -1 if unallocated.  The new K/V is
         scattered into page ``tables[b, pos//bs]`` (clamped to the null
-        page 0 for inactive slots, whose rows are all -1).
+        page 0 for inactive slots, whose rows are all -1); on the int8
+        path the fresh rows are quantized first and their scales scattered
+        at the same (page, offset), then attention runs the fused-dequant
+        kernel — pages stay int8 in HBM.
         """
         cfg = self.cfg
         tokens, pos = batch["tokens"], batch["pos"]
@@ -437,6 +465,7 @@ class Model:
         B = tokens.shape[0]
         bs = cache["k_pages"].shape[2]
         NB = tables.shape[1]
+        quant = "k_scales" in cache
         x = lm.embed_tokens(cfg, params, tokens)  # [B, d]
 
         page = jnp.maximum(tables[jnp.arange(B), pos // bs], 0)
@@ -447,6 +476,22 @@ class Model:
         use_kernel = jax.default_backend() == "tpu"
 
         def attend(q1, k1, v1, kv, window):
+            if quant:
+                kp, vp, ksc, vsc = kv
+                k8, k1s = quantize_kv(k1)  # [B, Hkv, D] -> int8 + [B, Hkv]
+                v8, v1s = quantize_kv(v1)
+                kp = kp.at[page, off].set(k8)
+                vp = vp.at[page, off].set(v8)
+                ksc = ksc.at[page, off].set(k1s)
+                vsc = vsc.at[page, off].set(v1s)
+                if use_kernel:
+                    o = paged_decode_quant_tpu(q1, kp, vp, ksc, vsc, tables,
+                                               pos, window=window)
+                else:
+                    o = paged_decode_attention_quant(q1, kp, vp, ksc, vsc,
+                                                     tables, pos,
+                                                     window=window)
+                return o, (kp, vp, ksc, vsc)
             kp, vp = kv
             kp = kp.at[page, off].set(k1.astype(kp.dtype))
             vp = vp.at[page, off].set(v1.astype(vp.dtype))
@@ -457,12 +502,14 @@ class Model:
                                            window=window)
             return o, (kp, vp)
 
-        x, k_new, v_new = self._attn_decode_scan(
-            params, x, pos, cache["k_pages"], cache["v_pages"], NB * bs,
+        names = (("k_pages", "v_pages", "k_scales", "v_scales") if quant
+                 else ("k_pages", "v_pages"))
+        x, kv_new = self._attn_decode_scan(
+            params, x, pos, tuple(cache[n] for n in names), NB * bs,
             attend)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x)
-        return logits, {"k_pages": k_new, "v_pages": v_new}
+        return logits, dict(zip(names, kv_new))
 
     # ------------------------------------------------------- chunked prefill
     def prefill_chunk_dense(self, params, cache, batch):
@@ -509,8 +556,8 @@ class Model:
                                         window=window)
             return o, (kc, vc)
 
-        x, k_new, v_new = self._attn_decode_scan(
-            params, x, qpos, cache["k"], cache["v"], Sa, attend,
+        x, (k_new, v_new) = self._attn_decode_scan(
+            params, x, qpos, (cache["k"], cache["v"]), Sa, attend,
             layer_fn=self._chunk_layer)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x[jnp.arange(B), n - 1])
@@ -529,6 +576,12 @@ class Model:
         out-of-bounds page ids) and attends back through the block table —
         the prefix-cache hit path needs no special casing: hit pages are
         simply already present in the table and ``pos`` starts past them.
+
+        With the int8 pool (cache carries ``k_scales``/``v_scales``) this
+        is the write-then-quantize path: the chunk's fresh K/V rows are
+        quantized before the scatter and the chunk attends back through
+        the *dequantized* pool — so a prefix-cache hit and a cold run of
+        the same prompt see bit-identical cache values.
         """
         cfg = self.cfg
         tokens, tables = batch["tokens"], batch["block_tables"]
@@ -536,6 +589,7 @@ class Model:
         B, C = tokens.shape
         P, bs = cache["k_pages"].shape[1:3]
         NB = tables.shape[1]
+        quant = "k_scales" in cache
         x = lm.embed_inputs(cfg, params, tokens, batch.get("embeds"),
                             batch.get("embed_mask"))  # [1, C, d]
         positions = (pos0 + jnp.arange(C)).astype(jnp.int32)  # [C]
@@ -547,6 +601,17 @@ class Model:
         qpos = positions[None]  # [1, C]
 
         def attend(q, k, v, kv, window):
+            if quant:
+                kp, vp, ksc, vsc = kv
+                k8, k1s = quantize_kv(k[0])  # [C, Hkv, D] -> int8 + [C, Hkv]
+                v8, v1s = quantize_kv(v[0])
+                kp = kp.at[wpage, off].set(k8)
+                vp = vp.at[wpage, off].set(v8)
+                ksc = ksc.at[wpage, off].set(k1s)
+                vsc = vsc.at[wpage, off].set(v1s)
+                o = paged_chunk_prefill_attention_quant(
+                    q, kp, vp, ksc, vsc, tables, qpos, window=window)
+                return o, (kp, vp, ksc, vsc)
             kp, vp = kv
             kp = kp.at[wpage, off].set(k[0].astype(kp.dtype))
             vp = vp.at[wpage, off].set(v[0].astype(vp.dtype))
@@ -554,12 +619,14 @@ class Model:
                                               window=window)
             return o, (kp, vp)
 
-        x, k_new, v_new = self._attn_decode_scan(
-            params, x, qpos, cache["k_pages"], cache["v_pages"], NB * bs,
+        names = (("k_pages", "v_pages", "k_scales", "v_scales") if quant
+                 else ("k_pages", "v_pages"))
+        x, kv_new = self._attn_decode_scan(
+            params, x, qpos, tuple(cache[n_] for n_ in names), NB * bs,
             attend, layer_fn=self._chunk_layer)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x[jnp.arange(B), n - 1])
-        return logits, {"k_pages": k_new, "v_pages": v_new}
+        return logits, dict(zip(names, kv_new))
 
     def _zamba2_decode(self, params, cache, x, pos):
         cfg = self.cfg

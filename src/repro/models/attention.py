@@ -386,6 +386,53 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
                             window=window, scale=scale, softcap=softcap)
 
 
+def decode_attention_quant(q, k_cache, v_cache, k_scales, v_scales,
+                           cache_positions, pos, *, window: int = 0,
+                           scale: float | None = None, softcap: float = 0.0):
+    """``decode_attention`` over an int8 cache: dequantize to fp32 (the
+    same values the fused Pallas kernel computes in-registers) and run the
+    full-precision contraction.  XLA fallback / oracle path — it
+    materializes the dequantized cache, which is exactly what the fused
+    kernels avoid."""
+    from repro.kernels.quant import dequantize_kv
+    kc = dequantize_kv(k_cache, k_scales, axis=-1)
+    vc = dequantize_kv(v_cache, v_scales, axis=-1)
+    return decode_attention(q, kc, vc, cache_positions, pos, window=window,
+                            scale=scale, softcap=softcap)
+
+
+def paged_decode_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_tables, pos, *, window: int = 0,
+                                 scale: float | None = None,
+                                 softcap: float = 0.0):
+    """``paged_decode_attention`` over an int8 page pool: dequantize the
+    pool to fp32 (scale rows share the page ids, so copy-on-write /
+    eviction / prefix reuse need no special casing) and delegate — the
+    worst-case pool is one page larger than the gathered view, so the
+    cost matches the bf16 fallback.  XLA fallback for
+    ``repro/kernels/paged_decode.paged_decode_quant_tpu`` and its parity
+    oracle."""
+    from repro.kernels.quant import dequantize_kv
+    return paged_decode_attention(
+        q, dequantize_kv(k_pages, k_scales), dequantize_kv(v_pages, v_scales),
+        block_tables, pos, window=window, scale=scale, softcap=softcap)
+
+
+def paged_chunk_prefill_attention_quant(q, k_pages, v_pages, k_scales,
+                                        v_scales, block_tables, qpos, *,
+                                        window: int = 0,
+                                        scale: float | None = None,
+                                        softcap: float = 0.0):
+    """``paged_chunk_prefill_attention`` over an int8 page pool: the
+    chunk's K/V (including its own write-then-attend rows) is read back
+    dequantized, so chunked prefill sees exactly the cache decode will —
+    a prefix-cache hit and a cold run attend to identical values."""
+    from repro.kernels.quant import dequantize_kv
+    return paged_chunk_prefill_attention(
+        q, dequantize_kv(k_pages, k_scales), dequantize_kv(v_pages, v_scales),
+        block_tables, qpos, window=window, scale=scale, softcap=softcap)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
 def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
     """O(S^2)-memory oracle (tests only — small shapes)."""

@@ -72,21 +72,37 @@ class EngineHandle(ServerHandle):
                  profile: cm.ModelProfile, *, is_cloud: bool = False,
                  seed: int = 0, max_batch: int = 2, max_seq: int = 96,
                  time_scale: float = 1.0, payload_bytes: float | None = None,
-                 fail: bool = False, **engine_kw):
+                 kv_dtype: str | None = None, fail: bool = False,
+                 **engine_kw):
         cfg = reduced(get_config(arch))
         self.cfg = cfg
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(seed))
         self.vtime = 0.0
+        # KV precision is itself an offloading decision: edge tiers
+        # default to the int8 page pool (half the decode KV stream, ~2x
+        # the page budget per HBM byte — what makes the weak tiers worth
+        # routing to), the cloud tier keeps bf16.  The profiled tick cost
+        # below prices the choice, so the router sees it through every
+        # backlog/latency estimate.  Quantized pages need the paged
+        # backend, so recurrent/hybrid archs (dense cache) stay bf16.
+        if kv_dtype is None:
+            kv_dtype = ("int8" if model.supports_paged and not is_cloud
+                        else "bf16")
+        self.kv_dtype = kv_dtype
         self.engine = ServingEngine(model, params, max_batch=max_batch,
-                                    max_seq=max_seq,
+                                    max_seq=max_seq, kv_dtype=kv_dtype,
                                     clock=lambda: self.vtime, **engine_kw)
         self.device = device
         self.profile = profile
         eff = device.flops * cm._EFF
         bw = device.mem_bw * cm._EFF
-        self.decode_tick_s = (time_scale * profile.n_active
-                              * profile.bytes_per_param / bw)
+        # per-tick decode roofline: active weights + the resident KV
+        # context (nominal half-full sequences) at this tier's precision
+        kv_stream = cm.kv_bytes_per_token(profile, kv_dtype) * (max_seq / 2)
+        self.decode_tick_s = (time_scale * (profile.n_active
+                                            * profile.bytes_per_param
+                                            + kv_stream) / bw)
         self.prefill_tok_s = time_scale * 2.0 * profile.n_active / eff
         # payload (default: the cost model's text+image request) split
         # evenly between request and response; both halves priced by the

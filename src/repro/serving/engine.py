@@ -12,9 +12,21 @@ Two cache backends:
     block table instead of a dense ``max_seq`` region, freed requests
     return their pages, and identical prompt prefixes across requests are
     served from the prefix trie without recomputation (copy-on-write).
+    ``kv_dtype="int8"`` stores the pool quantized (symmetric per-row
+    int8 + fp32 scales, ``repro/kernels/quant.py``): decode streams half
+    the KV bytes per tick through the fused-dequant kernels, and a fixed
+    ``kv_budget_bytes`` buys ~2x the pages — so admission control sees a
+    doubled page budget on edge-sized devices.
   * **dense** — the original one-region-per-slot layout, still used for
     recurrent/hybrid/cross-attention cache families (zamba2, xlstm,
     whisper) whose state is not an append-only token sequence.
+
+Decode-loop overhead: the jitted decode and chunked-prefill steps donate
+their cache argument (``donate_argnums``), so XLA updates the pool
+in-place instead of copying the full KV cache every tick, and the decode
+step argmaxes on device — one ``[B]`` int32 token-id transfer per tick
+instead of ``[B, vocab]`` logits (``return_logits=True`` restores the
+logits for tests).
 
 Prefill scheduling (attention family): prompts are **shape-bucketed** —
 right-padded to power-of-two lengths with the true length threaded through
@@ -51,9 +63,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quant import dequantize_kv, quantize_kv
 from repro.models.api import Model
 from repro.serving import segments as sg
-from repro.serving.kv_cache import BlockPool, BlockTable, OutOfPagesError
+from repro.serving.kv_cache import (BlockPool, BlockTable, OutOfPagesError,
+                                    kv_page_bytes)
 
 
 def bucket_length(n: int, *, minimum: int = 16, maximum: int | None = None
@@ -140,9 +154,11 @@ class ServingEngine:
                  max_seq: int = 256, eos_id: int | None = None,
                  greedy: bool = True, paged: bool | None = None,
                  page_size: int = 16, num_pages: int | None = None,
+                 kv_dtype: str = "bf16", kv_budget_bytes: int | None = None,
                  prefix_caching: bool = True, prefill_chunk: int = 64,
                  prefill_budget: int | None = None,
                  bucket_prompts: bool = True, min_bucket: int = 16,
+                 return_logits: bool = False,
                  clock: "Callable[[], float] | None" = None):
         """``prefill_chunk`` — tokens appended to the cache per chunked
         prefill call (0 disables chunking: one monolithic, still bucketed,
@@ -154,6 +170,20 @@ class ServingEngine:
         O(log max_seq) prefill variants instead of one per prompt length.
         Both knobs apply to the attention family only; recurrent/hybrid
         caches always use exact-shape monolithic prefill.
+
+        ``kv_dtype`` — precision of the paged KV pool: ``"bf16"``
+        (default, token-identical to the historical engine) or ``"int8"``
+        (quantized pages + fp32 scale rows, fused-dequant decode; paged
+        backend only).  ``kv_budget_bytes`` — size the page pool to a
+        device KV byte budget instead of the worst-case slot count: the
+        pool gets ``budget // page_bytes()`` pages, so the same budget
+        admits ~2x the pages under int8 (the admission-control headroom
+        the continuum's edge tiers trade precision for).
+
+        ``return_logits`` — the decode step normally argmaxes on device
+        and returns ``[B]`` token ids (one int32 per slot per tick over
+        the host link); True restores the full ``[B, vocab]`` logits
+        transfer for tests/inspection.
 
         ``clock`` — time source for request timestamps (``t_submit`` /
         ``token_times``).  Default is ``time.perf_counter`` (wall clock); an
@@ -177,6 +207,15 @@ class ServingEngine:
             raise ValueError(
                 f"{model.cfg.name}: paged serving needs an attention-family "
                 "cache; use paged=False")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'bf16' or 'int8', got {kv_dtype!r}")
+        if kv_dtype != "bf16" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' needs the paged cache backend (dense/"
+                "recurrent caches stay bf16)")
+        self.kv_dtype = kv_dtype
+        self.return_logits = return_logits
         self.bucketing = bucket_prompts and model.supports_bucketed_prefill
         self.chunked = prefill_chunk > 0 and model.supports_chunked_prefill
         self.prefill_chunk = prefill_chunk
@@ -193,27 +232,61 @@ class ServingEngine:
             self.page_size = page_size
             self.max_blocks = -(-max_seq // page_size)
             if num_pages is None:
-                # worst case (== dense capacity): admission/decode can
-                # never run out; size smaller to trade safety for memory
-                num_pages = 1 + max_batch * self.max_blocks
+                if kv_budget_bytes is not None:
+                    # device KV byte budget -> page count at this
+                    # precision: int8 pages are ~half the bytes, so the
+                    # same budget admits ~2x the pages
+                    num_pages = max(2, 1 + kv_budget_bytes
+                                    // self.page_bytes())
+                else:
+                    # worst case (== dense capacity): admission/decode can
+                    # never run out; size smaller to trade safety for
+                    # memory
+                    num_pages = 1 + max_batch * self.max_blocks
             self.prefix_caching = prefix_caching
             self.pool = BlockPool(num_pages, page_size)
-            abstract = model.abstract_paged_cache(num_pages, page_size)
+            abstract = model.abstract_paged_cache(num_pages, page_size,
+                                                  kv_dtype=kv_dtype)
             self.cache = {name: jnp.zeros(s.shape, s.dtype)
                           for name, s in abstract.items()}
             self.tables = np.full((max_batch, self.max_blocks), -1, np.int32)
             self.block_tables: list[BlockTable | None] = [None] * max_batch
-            self._step = jax.jit(model.serve_step_paged)
+            self._step = self._make_step(model.serve_step_paged)
             self._prefill_sfx = jax.jit(model.prefill_with_prefix)
-            self._prefill_chunk = jax.jit(model.prefill_chunk_paged)
+            self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
+                                          donate_argnums=(1,))
         else:
             self.cache = self._empty_cache()
-            self._step = jax.jit(model.serve_step)
+            self._step = self._make_step(model.serve_step)
             if self.chunked:
-                self._prefill_chunk = jax.jit(model.prefill_chunk_dense)
+                self._prefill_chunk = jax.jit(model.prefill_chunk_dense,
+                                              donate_argnums=(1,))
         self.ticks = 0
         self._progress = False
         self.finished: list[Request] = []
+
+    def _make_step(self, base_step):
+        """Jit the per-tick decode step with the two per-tick-overhead
+        fixes: the cache pytree is donated (``donate_argnums``) so XLA
+        reuses its buffers instead of materializing a full KV-cache copy
+        every tick, and — unless ``return_logits`` — the greedy argmax
+        runs on device so only ``[B]`` int32 token ids cross the host
+        link instead of ``[B, vocab]`` logits."""
+        if self.return_logits:
+            return jax.jit(base_step, donate_argnums=(1,))
+
+        def step_fn(params, cache, batch):
+            logits, cache = base_step(params, cache, batch)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        return jax.jit(step_fn, donate_argnums=(1,))
+
+    def page_bytes(self) -> int:
+        """Bytes one page pool entry costs across all layers (K+V values
+        plus int8 scale rows) — the ``kv_budget_bytes`` unit."""
+        cfg = self.model.cfg
+        return kv_page_bytes(cfg.n_layers, cfg.n_kv_heads, cfg.hd,
+                             self.page_size, self.kv_dtype)
 
     # ----------------------------------------------------- dense internals
     def _empty_cache(self):
@@ -296,12 +369,13 @@ class ServingEngine:
 
     # ----------------------------------------------------- paged internals
     def _cow_page(self, table: BlockTable, blk: int):
-        """Make ``table.pages[blk]`` privately writable, copying if shared."""
+        """Make ``table.pages[blk]`` privately writable, copying if shared.
+        Every cache leaf is indexed by page id on axis 1 — int8 scale
+        tensors included — so the copy moves values and scales together."""
         old = table.pages[blk]
         new, copied = self.pool.ensure_writable(old)
         if copied:
-            for name in ("k_pages", "v_pages"):
-                leaf = self.cache[name]
+            for name, leaf in self.cache.items():
                 self.cache[name] = leaf.at[:, new].set(leaf[:, old])
             self.pool.release(old)
             table.pages[blk] = new
@@ -390,8 +464,20 @@ class ServingEngine:
     def _scatter_kv(self, table: BlockTable, positions: np.ndarray, sk, sv,
                     n: int):
         """Scatter ``n`` computed K/V columns ([L, 1, >=n, Hkv, Dh]) into
-        the request's pages at the given logical positions."""
+        the request's pages at the given logical positions.  The int8
+        pool is write-then-quantize: monolithic prefill computes exact
+        bf16 K/V, rows are quantized here and their scales scattered at
+        the same (page, offset) indices."""
         pages, offs = table.rows_for(positions)
+        if self.kv_dtype == "int8":
+            for vname, sname, leaves in (("k_pages", "k_scales", sk),
+                                         ("v_pages", "v_scales", sv)):
+                rows, scales = quantize_kv(leaves[:, 0, :n])  # [L,n,Hkv,*]
+                self.cache[vname] = \
+                    self.cache[vname].at[:, pages, offs].set(rows)
+                self.cache[sname] = \
+                    self.cache[sname].at[:, pages, offs].set(scales)
+            return
         for name, leaves in (("k_pages", sk), ("v_pages", sv)):
             leaf = self.cache[name]
             self.cache[name] = leaf.at[:, pages, offs].set(
@@ -421,8 +507,17 @@ class ServingEngine:
             kp, vp = self.cache["k_pages"], self.cache["v_pages"]
             pre = np.asarray(table.pages, np.int32)
             L, _, _, Hkv, Dh = kp.shape
-            pk = kp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
-            pv = vp[:, pre].reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+            if self.kv_dtype == "int8":
+                # suffix prefill attends the cached prefix dequantized —
+                # the same values decode reads through the fused kernels
+                kg = dequantize_kv(kp[:, pre], self.cache["k_scales"][:, pre],
+                                   dtype=jnp.bfloat16)
+                vg = dequantize_kv(vp[:, pre], self.cache["v_scales"][:, pre],
+                                   dtype=jnp.bfloat16)
+            else:
+                kg, vg = kp[:, pre], vp[:, pre]
+            pk = kg.reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
+            pv = vg.reshape(L, -1, Hkv, Dh)[:, :n_reuse][:, None]
             batch = {"tokens": self._padded_prompt(toks[n_reuse:], Sb)}
             if self.bucketing:
                 batch["length"] = jnp.asarray([n_sfx], jnp.int32)
@@ -657,8 +752,10 @@ class ServingEngine:
             pos[pos >= self.max_seq] = 0  # clamp masked rows (null table)
             batch["pos"] = jnp.asarray(pos, jnp.int32)
             batch["block_tables"] = jnp.asarray(tables)
-        logits, self.cache = self._step(self.params, self.cache, batch)
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        out, self.cache = self._step(self.params, self.cache, batch)
+        # default path: ``out`` is already the [B] argmax token ids,
+        # computed on device — one int32 per slot crosses the host link
+        nxt = np.asarray(jnp.argmax(out, -1) if self.return_logits else out)
         self.ticks += 1
         t_now = self._now()
         for i in active:
@@ -761,6 +858,7 @@ class ServingEngine:
 
     def stats(self) -> dict:
         out = {"ticks": self.ticks, "paged": self.paged,
+               "kv_dtype": self.kv_dtype,
                "kv_cache_bytes": self.kv_cache_bytes(),
                "bucketed": self.bucketing, "chunked": self.chunked,
                "prefill_trace_count": self.prefill_trace_count(),

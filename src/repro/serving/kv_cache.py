@@ -29,6 +29,13 @@ invariants are testable without touching jax:
 Device-side layout (owned by the engine): ``k_pages``/``v_pages`` are
 ``[L, num_pages, block_size, Hkv, Dh]`` and a per-slot block table maps
 logical block ``j`` (token positions ``[j*bs, (j+1)*bs)``) to a page id.
+With ``kv_dtype="int8"`` the pools are stored quantized (symmetric
+per-row int8, repro/kernels/quant.py) and fp32 scale tensors
+``k_scales``/``v_scales`` ``[L, num_pages, block_size, Hkv]`` ride
+alongside them.  The pool bookkeeping here is unchanged by precision —
+pages are identified by id, and every device array (values *and* scales)
+is indexed by that id, so copy-on-write, LRU eviction and prefix-trie
+reuse carry the scales for free.
 """
 from __future__ import annotations
 
@@ -38,6 +45,35 @@ from collections import OrderedDict, deque
 import numpy as np
 
 NULL_PAGE = 0
+
+# bytes per stored K/V element per precision, plus the per-row (per token
+# position, per kv head) fp32 scale the int8 layout adds
+KV_DTYPE_BYTES = {"bf16": 2, "int8": 1}
+SCALE_ITEMSIZE = 4
+
+
+def kv_token_bytes(n_layers: int, n_kv_heads: int, head_dim: int,
+                   kv_dtype: str = "bf16") -> int:
+    """Bytes one token position occupies across the K+V pools of all
+    layers — the unit both the engine's ``kv_budget_bytes`` admission
+    sizing and the kernel_bench int8-vs-bf16 rows are denominated in.
+    int8 pays ``head_dim + 4`` bytes per head row (values + fp32 scale)
+    against bf16's ``2 * head_dim``: a ``2*Dh / (Dh+4)`` reduction, e.g.
+    1.94x at Dh=128."""
+    if kv_dtype not in KV_DTYPE_BYTES:
+        raise ValueError(f"kv_dtype must be one of {list(KV_DTYPE_BYTES)}, "
+                         f"got {kv_dtype!r}")
+    per_head = head_dim * KV_DTYPE_BYTES[kv_dtype]
+    if kv_dtype == "int8":
+        per_head += SCALE_ITEMSIZE
+    return 2 * n_layers * n_kv_heads * per_head  # K + V
+
+
+def kv_page_bytes(n_layers: int, n_kv_heads: int, head_dim: int,
+                  block_size: int, kv_dtype: str = "bf16") -> int:
+    """Bytes one page (all layers, K+V, scales included) occupies."""
+    return kv_token_bytes(n_layers, n_kv_heads, head_dim,
+                          kv_dtype) * block_size
 
 
 class OutOfPagesError(RuntimeError):

@@ -33,6 +33,7 @@ class DeviceProfile:
     mem_bw: float  # effective B/s for decode
     net_bw: float  # B/s to the user (LAN for edge, WAN for cloud)
     rtt: float  # s
+    hbm_bytes: float = 16e9  # accelerator memory (caps resident KV)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,25 +42,34 @@ class ModelProfile:
     n_active: float  # active params
     bytes_per_param: float  # quantization
     capability: float  # cognitive capability score
+    # KV-cache geometry (n_layers, kv_heads, head_dim): rough dims of the
+    # profiled checkpoints, enough for per-token KV byte rooflines
+    kv_layout: "tuple[int, int, int]" = (28, 4, 128)
 
 
 DEVICES = {
     "jetson_orin_nano": DeviceProfile("jetson_orin_nano", 20e12, 48e9,
-                                      12.5e6, 0.004),
-    "rtx3090ti": DeviceProfile("rtx3090ti", 120e12, 800e9, 12.5e6, 0.004),
-    "rtx5090": DeviceProfile("rtx5090", 300e12, 1.5e12, 3e6, 0.030),
+                                      12.5e6, 0.004, hbm_bytes=8e9),
+    "rtx3090ti": DeviceProfile("rtx3090ti", 120e12, 800e9, 12.5e6, 0.004,
+                               hbm_bytes=24e9),
+    "rtx5090": DeviceProfile("rtx5090", 300e12, 1.5e12, 3e6, 0.030,
+                             hbm_bytes=32e9),
     # TPU-native serving classes (hardware adaptation; README.md, Design notes)
-    "tpu_v5e_1": DeviceProfile("tpu_v5e_1", 197e12, 819e9, 12.5e6, 0.004),
+    "tpu_v5e_1": DeviceProfile("tpu_v5e_1", 197e12, 819e9, 12.5e6, 0.004,
+                               hbm_bytes=16e9),
     "tpu_v5e_4": DeviceProfile("tpu_v5e_4", 4 * 197e12, 4 * 819e9,
-                               12.5e6, 0.004),
+                               12.5e6, 0.004, hbm_bytes=4 * 16e9),
     "tpu_v5e_pod": DeviceProfile("tpu_v5e_pod", 256 * 197e12, 256 * 819e9,
-                                 3e6, 0.030),
+                                 3e6, 0.030, hbm_bytes=256 * 16e9),
 }
 
 MODELS = {
-    "qwen3vl-2b": ModelProfile("qwen3vl-2b", 2e9, 1.0, 0.94),
-    "qwen3vl-8b": ModelProfile("qwen3vl-8b", 8e9, 1.0, 0.88),
-    "qwen3vl-30b": ModelProfile("qwen3vl-30b", 3e9, 2.0, 1.02),  # MoE A3B
+    "qwen3vl-2b": ModelProfile("qwen3vl-2b", 2e9, 1.0, 0.94,
+                               kv_layout=(28, 2, 128)),
+    "qwen3vl-8b": ModelProfile("qwen3vl-8b", 8e9, 1.0, 0.88,
+                               kv_layout=(36, 4, 128)),
+    "qwen3vl-30b": ModelProfile("qwen3vl-30b", 3e9, 2.0, 1.02,  # MoE A3B
+                                kv_layout=(48, 4, 128)),
 }
 
 MODEL_IDS = list(MODELS)
@@ -99,6 +109,58 @@ def downlink_s(nbytes, device: DeviceProfile):
 
 
 _PREFILL_MIN_BUCKET = 16  # mirrors ServingEngine's min_bucket default
+
+# ------------------------------------------------------- KV-cache roofline
+#
+# The bytes/token -> decode_s -> router-score chain: decode is memory-
+# bandwidth-bound, and what streams through HBM every generated token is
+# (a) the active weights and (b) the resident KV context.  Quantizing KV
+# to int8 (ServingEngine kv_dtype="int8") halves (b) — kv_bytes_per_token
+# drops ~2x — which lowers decode_s and, through EngineHandle's tick cost
+# and backlog probe, the router's effective-latency score for that server;
+# the same bytes/token figure divides the device's HBM budget, so it also
+# sets how many sequences can be resident at once (kv_concurrency).  The
+# per-element byte costs mirror repro/serving/kv_cache.KV_DTYPE_BYTES.
+
+KV_DTYPE_BYTES = {"bf16": 2.0, "int8": 1.0}
+_KV_SCALE_BYTES = 4.0  # fp32 scale per (token, kv head) row, int8 only
+
+
+def kv_bytes_per_token(model: ModelProfile, kv_dtype: str = "bf16") -> float:
+    """HBM bytes one token's K+V occupy across all layers of ``model``."""
+    L, hkv, dh = model.kv_layout
+    per_head = dh * KV_DTYPE_BYTES[kv_dtype]
+    if kv_dtype == "int8":
+        per_head += _KV_SCALE_BYTES
+    return 2.0 * L * hkv * per_head
+
+
+def decode_s(device: DeviceProfile, model: ModelProfile, out_tokens,
+             context_tokens=0.0, kv_dtype: str = "bf16") -> np.ndarray:
+    """Decode roofline: every generated token streams the active weights
+    plus the resident KV context (``context_tokens`` positions) through
+    HBM.  ``context_tokens=0`` recovers the legacy weights-only decode
+    term used by ``latency_s``'s calibrated aggregates."""
+    bytes_per_tok = (model.n_active * model.bytes_per_param
+                     + kv_bytes_per_token(model, kv_dtype)
+                     * np.asarray(context_tokens, float))
+    return np.asarray(out_tokens, float) * bytes_per_tok / (
+        device.mem_bw * _EFF)
+
+
+def kv_concurrency(device: DeviceProfile, model: ModelProfile,
+                   seq_len: int, kv_dtype: str = "bf16",
+                   hbm_frac: float = 0.3) -> int:
+    """Sequences of ``seq_len`` whose KV fits the device's cache budget
+    (``hbm_frac`` of the HBM left after the resident weights) — the
+    per-device concurrency cap int8 roughly doubles, which is what lets
+    edge tiers admit more requests at the same memory.  0 when the
+    weights alone do not fit the device."""
+    free = device.hbm_bytes - model.n_active * model.bytes_per_param
+    if free <= 0:
+        return 0
+    per_seq = seq_len * kv_bytes_per_token(model, kv_dtype)
+    return int(hbm_frac * free / per_seq)
 
 
 def expected_out_tokens(model: ModelProfile, difficulty) -> np.ndarray:
@@ -148,7 +210,8 @@ def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
 
 def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
               difficulty, rng: np.random.Generator | None = None,
-              prefix_hit_rate=0.0, prefill_chunk: int | None = None):
+              prefix_hit_rate=0.0, prefill_chunk: int | None = None,
+              kv_dtype: str | None = None):
     """Roofline latency; lognormal noise if rng given.
 
     ``prefix_hit_rate`` is the expected fraction of prompt tokens already
@@ -159,6 +222,13 @@ def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
     ``prefill_chunk`` (None = legacy smooth model) models the serving
     engine's bucketed + chunked prefill instead: compute covers the padded
     bucket shapes, so the estimate tracks what the engine actually runs.
+
+    ``kv_dtype`` (None = legacy weights-only decode, keeping the
+    calibrated Fig. 1 aggregates untouched) adds the KV-streaming term to
+    decode: each generated token also reads the resident context
+    (prompt + the mean half of the answer so far) at
+    ``kv_bytes_per_token(model, kv_dtype)`` — the bytes/token → decode_s
+    → router-score chain int8 KV compresses.
     """
     hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
     prefill = prefill_s(device, model, prompt_tokens,
@@ -166,8 +236,12 @@ def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
     out_tok = expected_out_tokens(model, np.asarray(difficulty))
     if rng is not None:
         out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))
-    decode = out_tok * model.n_active * model.bytes_per_param / (
-        device.mem_bw * _EFF)
+    if kv_dtype is None:
+        decode = decode_s(device, model, out_tok)
+    else:
+        ctx = np.asarray(prompt_tokens, float) + out_tok / 2.0
+        decode = decode_s(device, model, out_tok, context_tokens=ctx,
+                          kv_dtype=kv_dtype)
     # request up + (byte-free) response down == payload/bw + rtt, the
     # historical transmission term
     trans = uplink_s(_PAYLOAD, device) + downlink_s(0.0, device)
