@@ -13,7 +13,15 @@ CI-smoke entry: ``python benchmarks/fig10_continuum_replay.py`` finishes
 on CPU in under a minute with tiny configs and asserts that QLMIO beats
 the all-cloud baseline on mean e2e latency at a matching completion rate.
 Sweep sizes scale with ``BENCH_BUDGET`` (smoke | fast | paper).
+
+``--trace PATH`` additionally exports the qlmio replay's full telemetry
+(request lifecycle spans, engine ticks, dispatch audit) as Perfetto-
+loadable Chrome trace JSON — feed it to ``scripts/trace_report.py``.
+The dispatch audit runs either way, so the emitted JSON always carries
+``cost_model`` prediction-error percentiles (gated in
+``benchmarks/baseline.json``).
 """
+import argparse
 import os
 import sys
 import time
@@ -31,6 +39,7 @@ from repro.serving.cluster import (  # noqa: E402
     EngineBackend,
     build_continuum,
 )
+from repro.serving.telemetry import Telemetry  # noqa: E402
 from repro.sim import cost_model as cm  # noqa: E402
 from repro.sim.cemllm import make_servers_from_spec, run_policy  # noqa: E402
 from repro.sim.miobench import SERVER_CLASSES, generate  # noqa: E402
@@ -99,7 +108,7 @@ def mgqp_policy(b_hat, servers):
     return policy
 
 
-def run():
+def run(trace_path: "str | None" = None):
     b = BUDGETS[os.environ.get("BENCH_BUDGET", "smoke")]
     bench = generate(seed=0, n_tasks=b["n_tasks"])
     servers = make_servers_from_spec(SPEC, bench)
@@ -108,7 +117,10 @@ def run():
     tasks = rng.choice(bench.tasks.n, b["users"], replace=False)
 
     t0 = time.time()
-    handles = build_continuum(SPEC, seed=0)
+    # dispatch audit always on (it feeds the gated cost_model metric);
+    # span recording only when a trace export was requested
+    tm = Telemetry(trace=bool(trace_path))
+    handles = build_continuum(SPEC, seed=0, telemetry=tm)
     cluster = Cluster(handles)
     print(f"fig10,continuum,{len(handles)}_live_engines,"
           f"build_s,{time.time() - t0:.1f}")
@@ -141,6 +153,17 @@ def run():
               f"{r['p95_latency_s']:.3f},{r.get('avg_ttft_s', 0.0):.3f},"
               f"{r['completion_rate']:.3f},{r['per_server_requests']}")
 
+    # the telemetry still holds the last (qlmio) replay — capture its
+    # cost-model calibration and trace before the tradeoff sweep resets it
+    pred_err = tm.prediction_error()
+    print(f"fig10,cost_model,n={pred_err['n']},"
+          f"mean_abs_pct_err,{pred_err['mean_abs_pct_err']:.2f},"
+          f"p95_abs_pct_err,{pred_err['p95_abs_pct_err']:.2f}")
+    if trace_path:
+        tm.export(trace_path)
+        print(f"fig10,trace,{trace_path},"
+              f"{len(tm.tracer.events)}_events")
+
     # quality-latency tradeoff curve: sweep the QLMIO quality weight
     curve = []
     for w in b["weights"]:
@@ -158,7 +181,8 @@ def run():
           f"completion_vs_cloud,{comp:.3f},wall_s,{time.time() - t0:.1f}")
     emit("fig10_continuum_replay", {"results": results, "tradeoff": curve,
                                     "latency_reduction_vs_all_cloud": red,
-                                    "completion_vs_cloud": comp})
+                                    "completion_vs_cloud": comp,
+                                    "cost_model": pred_err})
     # acceptance: real-engine QLMIO beats all-cloud on mean e2e latency at
     # a matching completion rate (paper Sec. V-F, now with live engines)
     assert q["avg_latency_s"] < ac["avg_latency_s"], \
@@ -169,4 +193,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the qlmio replay's telemetry as Chrome "
+                         "trace JSON (view in Perfetto, or feed to "
+                         "scripts/trace_report.py)")
+    run(trace_path=ap.parse_args().trace)

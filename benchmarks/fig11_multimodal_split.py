@@ -43,6 +43,7 @@ from repro.models.mm_encoder import (  # noqa: E402
 )
 from repro.serving.cluster import Cluster, build_continuum  # noqa: E402
 from repro.serving.segments import EmbedSegment, TextSegment  # noqa: E402
+from repro.serving.telemetry import Telemetry  # noqa: E402
 from repro.sim import cost_model as cm  # noqa: E402
 from repro.sim.miobench import SERVER_CLASSES, generate  # noqa: E402
 
@@ -112,7 +113,8 @@ def run():
     # base links carry the *text* payload only (request up, response
     # down); media bytes are charged per request by the chosen split via
     # media_delay_s — the default 300 KB payload would double-charge them
-    handles = build_continuum(SPEC, seed=0,
+    tm = Telemetry(trace=False)  # dispatch audit only (media term incl.)
+    handles = build_continuum(SPEC, seed=0, telemetry=tm,
                               payload_bytes=2 * cm.PAYLOAD_BYTES["text"])
     cluster = Cluster(handles)
     vocab = handles[0].cfg.vocab
@@ -175,9 +177,21 @@ def run():
                 seg, _ = media[task]
                 segs, toks = [seg, TextSegment(text_span(task))], None
             quality_ok = int(bench.score[task, int(cls[s])]) == 1
-            cluster.submit(s, task, toks, gen_budget(task, s), t_arrival=t,
-                           quality_ok=quality_ok, segments=segs,
-                           media_delay_s=delay)
+            budget_tok = gen_budget(task, s)
+            if segs is not None:
+                L = len(segs[0].features) + len(segs[1].tokens)
+            else:
+                L = len(toks)
+            # predict before submit: the queue term must exclude this
+            # request; the audit joins the measured e2e at collect()
+            predicted, terms = handles[s].predict_e2e_s(
+                L, budget_tok, media_delay_s=delay)
+            uid = cluster.submit(s, task, toks, budget_tok, t_arrival=t,
+                                 quality_ok=quality_ok, segments=segs,
+                                 media_delay_s=delay)
+            tm.record_dispatch(task=task, server=s, t=t,
+                               predicted_s=predicted, uid=uid, terms=terms,
+                               policy_est_s=float(total[s]))
             t += b["arrival_dt"]
             cluster.advance_to(t)
         cluster.drain()
@@ -187,7 +201,8 @@ def run():
                 "p95_e2e_s": float(np.percentile(e2e, 95)),
                 "completion_rate": float(np.mean(
                     [r["success"] for r in recs])),
-                "split_choices": choices}
+                "split_choices": choices,
+                "cost_model": tm.prediction_error()}
 
     results = {}
     print("fig11,policy,mean_e2e_s,p95_e2e_s,completion_rate,"
@@ -200,6 +215,11 @@ def run():
         print(f"fig11,{name},{r['mean_e2e_s']:.3f},{r['p95_e2e_s']:.3f},"
               f"{r['completion_rate']:.3f},"
               f"{ch['raw']}/{ch['edge']}/{ch['none']}")
+
+    err = results["qlmio_split"]["cost_model"]
+    print(f"fig11,cost_model,n={err['n']},"
+          f"mean_abs_pct_err,{err['mean_abs_pct_err']:.2f},"
+          f"p95_abs_pct_err,{err['p95_abs_pct_err']:.2f}")
 
     q = results["qlmio_split"]
     raw, edge = results["all_raw_ship"], results["all_edge_encode"]

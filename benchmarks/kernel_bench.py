@@ -11,8 +11,12 @@ compile counts); ``... serving paged_kv`` adds the analytic paged-KV
 memory/throughput section — the CI smoke entry.  ``--json PATH`` writes
 every section that ran to one JSON file, the input of the CI benchmark
 regression gate (``scripts/check_bench.py`` vs. ``benchmarks/
-baseline.json``).
+baseline.json``).  ``--profile DIR`` wraps the timing loops in
+``jax.profiler.trace``: the XLA/TPU profile lands in ``DIR`` (open with
+TensorBoard or Perfetto), next to the serving-layer traces
+``fig10_continuum_replay.py --trace`` exports.
 """
+import contextlib
 import json
 import sys
 import time
@@ -272,30 +276,45 @@ def run():
             "paged_kv": paged, "serving": serving}
 
 
+def _flag_value(args: "list[str]", flag: str) -> "str | None":
+    if flag not in args:
+        return None
+    i = args.index(flag)
+    if i + 1 >= len(args):
+        raise SystemExit(f"kernel_bench: {flag} needs a value")
+    value = args[i + 1]
+    del args[i:i + 2]
+    return value
+
+
 def main(argv: "list[str]") -> dict:
     """CLI: positional section names (``serving``, ``paged_kv``; none =
     full kernel sweep) + optional ``--json PATH`` writing every section
-    that ran to one file for ``scripts/check_bench.py``."""
+    that ran to one file for ``scripts/check_bench.py``, and optional
+    ``--profile DIR`` recording a ``jax.profiler.trace`` around the
+    timing loops (kernel-level XLA/TPU profile)."""
     args = list(argv)
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        if i + 1 >= len(args):
-            raise SystemExit("kernel_bench: --json needs a file path")
-        json_path = args[i + 1]
-        del args[i:i + 2]
+    json_path = _flag_value(args, "--json")
+    profile_dir = _flag_value(args, "--profile")
     sections = [a for a in args if not a.startswith("-")]
     unknown = [s for s in sections if s not in ("serving", "paged_kv")]
     if unknown:
         raise SystemExit(f"kernel_bench: unknown section(s) {unknown}; "
                          "available: serving, paged_kv (none = full sweep)")
     out = {}
-    if "paged_kv" in sections:
-        out["paged_kv"] = paged_kv_bench()
-    if "serving" in sections:
-        out["serving"] = serving_prefill_bench()
-    if not sections:
-        out = run()  # full sweep: kernels + paged_kv + serving
+    with contextlib.ExitStack() as stack:
+        if profile_dir is not None:
+            try:
+                stack.enter_context(jax.profiler.trace(profile_dir))
+                print(f"kernel_bench: profiling to {profile_dir}")
+            except Exception as e:  # profiler backend unavailable
+                print(f"kernel_bench: --profile disabled ({e})")
+        if "paged_kv" in sections:
+            out["paged_kv"] = paged_kv_bench()
+        if "serving" in sections:
+            out["serving"] = serving_prefill_bench()
+        if not sections:
+            out = run()  # full sweep: kernels + paged_kv + serving
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1)

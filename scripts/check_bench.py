@@ -10,6 +10,13 @@ Usage:
     python scripts/check_bench.py bench.json
     python scripts/check_bench.py bench.json --update   # refresh baseline
 
+Several bench JSONs can be gated in one run — they are shallow-merged in
+argument order (later files win on key collisions), so the fig10 replay's
+``cost_model`` prediction-error metrics ride the same baseline as the
+kernel bench numbers:
+
+    python scripts/check_bench.py bench.json fig10_continuum_replay.json
+
 Baseline schema — one entry per gated metric, addressed by a dotted path
 into the bench JSON:
 
@@ -73,14 +80,19 @@ def check_metric(name: str, spec: dict, measured) -> "str | None":
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("bench_json", help="output of kernel_bench.py --json")
+    ap.add_argument("bench_json", nargs="+",
+                    help="bench JSON file(s): kernel_bench.py --json "
+                         "output, benchmark result JSONs; shallow-merged "
+                         "in order")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite baseline values from this measurement")
     args = ap.parse_args(argv)
 
-    with open(args.bench_json) as f:
-        bench = json.load(f)
+    bench: dict = {}
+    for path in args.bench_json:
+        with open(path) as f:
+            bench.update(json.load(f))
     with open(args.baseline) as f:
         baseline = json.load(f)
 

@@ -26,18 +26,27 @@ fi
 python -m pytest -x -q
 python scripts/smoke_decode.py
 
-# serving prefill smoke + benchmark regression gate: TTFT/ITL p95, prefill
-# trace counts, paged-decode throughput and the int8-KV sections
-# (paged_kv.int8 bytes/token + throughput, serving.chunked_int8 run) vs.
-# benchmarks/baseline.json; the JSON is uploaded as a CI artifact
+# serving prefill smoke: TTFT/ITL p95, prefill trace counts, paged-decode
+# throughput and the int8-KV sections (paged_kv.int8 bytes/token +
+# throughput, serving.chunked_int8 run); gated below together with the
+# fig10 cost-model metric, and uploaded as a CI artifact
 mkdir -p results
 PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py \
     serving paged_kv --json results/bench.json
-python scripts/check_bench.py results/bench.json
 
-# continuum replay smoke: QLMIO over real ServingEngines must beat the
-# all-cloud baseline on mean e2e latency at a matching completion rate
-PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig10_continuum_replay.py
+# continuum replay smoke with tracing: QLMIO over real ServingEngines must
+# beat the all-cloud baseline on mean e2e latency at a matching completion
+# rate; the exported Perfetto trace (also a CI artifact) must render a
+# per-stage report, and the emitted JSON carries the cost-model
+# prediction-error metric for the regression gate
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig10_continuum_replay.py \
+    --trace results/fig10_trace.json
+python scripts/trace_report.py results/fig10_trace.json
+
+# benchmark regression gate: kernel/serving numbers + the fig10 replay's
+# cost_model.mean_abs_pct_err, all vs. benchmarks/baseline.json
+python scripts/check_bench.py results/bench.json \
+    results/fig10_continuum_replay.json
 
 # multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
 # ship vs edge-encode) must beat both fixed policies on mean e2e latency

@@ -1,0 +1,177 @@
+"""Continuum trace report: per-stage latency decomposition + calibration.
+
+Reads a trace JSON exported by ``repro.serving.telemetry.Telemetry``
+(Chrome trace-event format plus the dispatch audit riding along as extra
+top-level keys) and prints:
+
+  * per-stage p50/p95 latency decomposition — every span category/name
+    pair (uplink, queue, prefill, decode, downlink, prefill_chunk,
+    tick, ...) over its recorded durations;
+  * per-engine utilization — busy fraction (span-covered time / trace
+    horizon) per traced process, with a coarse timeline;
+  * top-N slowest requests — by summed lifecycle span duration per
+    (engine, request) thread, with their per-stage breakdown;
+  * cost-model calibration — prediction-error percentiles from the
+    dispatch audit (predicted vs. measured e2e), the paper's
+    "latency is hard to predict" claim as a measured number.
+
+Usage:
+    python benchmarks/fig10_continuum_replay.py --trace t.json
+    python scripts/trace_report.py t.json [--top 5]
+
+The same file loads in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing`` for interactive inspection.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+import numpy as np
+
+_US = 1e6
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def spans(trace: dict) -> "list[dict]":
+    return [ev for ev in trace.get("traceEvents", [])
+            if ev.get("ph") == "X"]
+
+
+def process_names(trace: dict) -> dict:
+    """pid -> process name from the trace's metadata events."""
+    return {ev["pid"]: ev["args"]["name"]
+            for ev in trace.get("traceEvents", [])
+            if ev.get("ph") == "M" and ev.get("name") == "process_name"}
+
+
+def stage_summary(trace: dict) -> "list[dict]":
+    """Per-(category, name) duration percentiles over every span."""
+    groups: dict = defaultdict(list)
+    for ev in spans(trace):
+        groups[(ev.get("cat", "?"), ev["name"])].append(ev["dur"] / _US)
+    out = []
+    for (cat, name), durs in sorted(groups.items()):
+        out.append({"cat": cat, "name": name, "count": len(durs),
+                    "p50_s": _pct(durs, 50), "p95_s": _pct(durs, 95),
+                    "total_s": float(np.sum(durs))})
+    return out
+
+
+def engine_utilization(trace: dict, buckets: int = 20) -> "list[dict]":
+    """Busy fraction per engine from its ``tick`` spans: the share of the
+    trace horizon covered by engine ticks (ticks only run while the
+    engine has work), plus a coarse busy-fraction timeline."""
+    names = process_names(trace)
+    ticks: dict = defaultdict(list)
+    horizon = 0.0
+    for ev in spans(trace):
+        horizon = max(horizon, (ev["ts"] + ev["dur"]) / _US)
+        if ev["name"] == "tick":
+            ticks[ev["pid"]].append((ev["ts"] / _US, ev["dur"] / _US))
+    out = []
+    for pid in sorted(ticks):
+        ts = ticks[pid]
+        busy = sum(d for _, d in ts)
+        hist = np.zeros(buckets)
+        if horizon > 0:
+            w = horizon / buckets
+            for t0, d in ts:
+                b0, b1 = int(t0 / w), min(int((t0 + d) / w), buckets - 1)
+                for b in range(b0, b1 + 1):  # overlap per bucket
+                    lo, hi = b * w, (b + 1) * w
+                    hist[b] += max(0.0, min(t0 + d, hi) - max(t0, lo))
+            hist /= w
+        out.append({"engine": names.get(pid, f"pid{pid}"),
+                    "busy_s": busy,
+                    "busy_frac": busy / horizon if horizon else 0.0,
+                    "timeline": np.clip(hist, 0.0, 1.0)})
+    return out
+
+
+def slow_requests(trace: dict, top: int = 5) -> "list[dict]":
+    """Top-N slowest requests by summed lifecycle+transfer span time on
+    their (engine, request-uid) thread."""
+    names = process_names(trace)
+    per_req: dict = defaultdict(dict)
+    for ev in spans(trace):
+        if ev.get("cat") not in ("lifecycle", "transfer"):
+            continue
+        per_req[(ev["pid"], ev["tid"])][ev["name"]] = ev["dur"] / _US
+    ranked = sorted(per_req.items(), key=lambda kv: -sum(kv[1].values()))
+    return [{"engine": names.get(pid, f"pid{pid}"), "uid": tid,
+             "total_s": sum(stages.values()), "stages": stages}
+            for (pid, tid), stages in ranked[:top]]
+
+
+def _bar(frac_row, width: int = 1) -> str:
+    glyphs = " .:-=+*#%@"
+    return "".join(glyphs[min(int(f * (len(glyphs) - 1) + 0.5),
+                              len(glyphs) - 1)] * width for f in frac_row)
+
+
+def report(trace: dict, top: int = 5) -> str:
+    lines = []
+    stages = stage_summary(trace)
+    lines.append("== per-stage latency decomposition (seconds) ==")
+    if stages:
+        lines.append(f"{'stage':<28}{'count':>7}{'p50':>10}{'p95':>10}"
+                     f"{'total':>10}")
+        for s in stages:
+            lines.append(f"{s['cat'] + '/' + s['name']:<28}"
+                         f"{s['count']:>7}{s['p50_s']:>10.4f}"
+                         f"{s['p95_s']:>10.4f}{s['total_s']:>10.2f}")
+    else:
+        lines.append("(no spans recorded — was tracing enabled?)")
+
+    util = engine_utilization(trace)
+    lines.append("")
+    lines.append("== per-engine utilization (tick-covered time) ==")
+    for u in util:
+        lines.append(f"{u['engine']:<36}{100 * u['busy_frac']:>6.1f}%  "
+                     f"[{_bar(u['timeline'])}]")
+
+    slow = slow_requests(trace, top)
+    lines.append("")
+    lines.append(f"== top-{top} slow requests ==")
+    for r in slow:
+        parts = ", ".join(f"{k}={v:.4f}" for k, v in
+                          sorted(r["stages"].items(), key=lambda kv: -kv[1]))
+        lines.append(f"uid {r['uid']:>5} on {r['engine']:<32}"
+                     f"{r['total_s']:>9.4f}s  ({parts})")
+
+    err = trace.get("prediction_error") or {}
+    lines.append("")
+    lines.append("== cost-model calibration (predicted vs measured e2e) ==")
+    if err.get("n"):
+        lines.append(f"n={err['n']}  "
+                     f"mean|err|={err['mean_abs_pct_err']:.1f}%  "
+                     f"p50|err|={err['p50_abs_pct_err']:.1f}%  "
+                     f"p95|err|={err['p95_abs_pct_err']:.1f}%  "
+                     f"bias={err['mean_signed_pct_err']:+.1f}%")
+    else:
+        lines.append("(no completed audited dispatches in this trace)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace_json", help="Telemetry.export output")
+    ap.add_argument("--top", type=int, default=5,
+                    help="slow requests to list (default 5)")
+    args = ap.parse_args(argv)
+    print(report(load_trace(args.trace_json), top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

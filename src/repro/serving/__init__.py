@@ -5,9 +5,14 @@ from repro.serving.router import (  # noqa: F401
     ServerHandle,
     SimulatedServer,
 )
+from repro.serving.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+)
 
 __all__ = ["ServingEngine", "HealthTracker", "QLMIORouter", "ServerHandle",
-           "SimulatedServer"]
+           "SimulatedServer", "Telemetry", "MetricsRegistry", "Tracer"]
 
 # repro.serving.cluster (the continuum replay harness) is imported lazily
 # by its users: it pulls in model building, which this package's light

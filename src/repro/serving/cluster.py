@@ -36,6 +36,15 @@ same interface as ``CostModelBackend``: dispatch-time estimates are the
 cost-model numbers (so a deterministic policy takes identical decisions
 under either backend), and ``drain()`` patches the episode records with
 measured latencies once every engine has drained.
+
+Observability (repro/serving/telemetry.py): pass ``telemetry=`` to
+``build_continuum``/``Cluster`` to record uplink/media-encode/downlink
+transfer spans, per-engine tick spans with true virtual durations, and a
+dispatch audit — each routed request's predicted e2e with per-term
+breakdown (``EngineHandle.predict_e2e_s``), joined with the measured e2e
+at ``collect()`` so ``Telemetry.prediction_error`` reports cost-model
+calibration.  ``Cluster.reset`` also resets every engine's metrics
+registry, so per-replay stats stay independent.
 """
 from __future__ import annotations
 
@@ -48,6 +57,7 @@ from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.router import ServerHandle
+from repro.serving.telemetry import latency_summary
 from repro.sim import cost_model as cm
 from repro.sim.cemllm import CostModelBackend
 from repro.sim.miobench import SERVER_CLASSES
@@ -73,7 +83,7 @@ class EngineHandle(ServerHandle):
                  seed: int = 0, max_batch: int = 2, max_seq: int = 96,
                  time_scale: float = 1.0, payload_bytes: float | None = None,
                  kv_dtype: str | None = None, fail: bool = False,
-                 **engine_kw):
+                 telemetry=None, **engine_kw):
         cfg = reduced(get_config(arch))
         self.cfg = cfg
         model = build_model(cfg)
@@ -92,7 +102,13 @@ class EngineHandle(ServerHandle):
         self.kv_dtype = kv_dtype
         self.engine = ServingEngine(model, params, max_batch=max_batch,
                                     max_seq=max_seq, kv_dtype=kv_dtype,
-                                    clock=lambda: self.vtime, **engine_kw)
+                                    clock=lambda: self.vtime,
+                                    telemetry=telemetry, trace_name=name,
+                                    **engine_kw)
+        self.telemetry = telemetry
+        tr = telemetry.tracer if telemetry is not None else None
+        self._tr = tr if (tr is not None and tr.enabled) else None
+        self._pid = self._tr.process(name) if self._tr else 0
         self.device = device
         self.profile = profile
         eff = device.flops * cm._EFF
@@ -183,9 +199,17 @@ class EngineHandle(ServerHandle):
                 continue
             e = self.engine
             p0 = e.prefill_tokens_computed + e.prefill_tokens_padded
-            e.step()
+            n_busy = e.step()
             dp = e.prefill_tokens_computed + e.prefill_tokens_padded - p0
-            self.vtime += self.decode_tick_s + dp * self.prefill_tok_s
+            dt = self.decode_tick_s + dp * self.prefill_tok_s
+            if self._tr is not None:
+                # engine-side spans within one tick are zero-width under
+                # the virtual clock (vtime advances *after* the step);
+                # this span carries the tick's true virtual duration
+                self._tr.span("tick", "engine", self.vtime,
+                              self.vtime + dt, pid=self._pid,
+                              args={"prefill_tokens": dp, "busy": n_busy})
+            self.vtime += dt
 
     # ------------------------------------------------------------- probes
     def _load(self) -> dict:
@@ -207,6 +231,28 @@ class EngineHandle(ServerHandle):
         return {"queue_depth": len(waiting) + len(active) + len(tasks),
                 "inflight_prefill_tokens": int(inflight),
                 "backlog_s": float(backlog)}
+
+    def predict_e2e_s(self, prompt_tokens: int, max_new_tokens: int, *,
+                      media_delay_s: float = 0.0) -> "tuple[float, dict]":
+        """Predicted end-to-end virtual seconds for a request dispatched
+        to this server *now*, decomposed per term — the dispatch-audit
+        record ``Telemetry.prediction_error`` calibrates against measured
+        e2e.  Built from the same per-tick costs ``advance_to`` charges
+        (harness scale), so the error measures congestion/interleaving
+        mispredictions, not the replay's deliberate scale-down vs. the
+        paper-scale cost model.  Call *before* ``Cluster.submit`` so the
+        queue term excludes the request itself."""
+        e = self.engine
+        queue = self._load()["backlog_s"]
+        n_pref = float(cm.chunked_prefill_tokens(
+            prompt_tokens, e.prefill_chunk if e.chunked else 0,
+            minimum=e.min_bucket if e.bucketing else 1))
+        terms = {"queue": queue,
+                 "prefill": n_pref * self.prefill_tok_s,
+                 "decode": max_new_tokens * self.decode_tick_s,
+                 "media": float(media_delay_s),
+                 "link": self.up_s + self.down_s}
+        return sum(terms.values()), terms
 
     def _execute_sync(self, task: int) -> "tuple[float, bool]":
         """Legacy ``ServerHandle.execute``: run one task to completion on
@@ -236,12 +282,20 @@ class Cluster:
     """
 
     def __init__(self, handles: "list[EngineHandle]",
-                 timeout_s: float = cm.TIMEOUT_S):
+                 timeout_s: float = cm.TIMEOUT_S, telemetry=None):
         self.handles = handles
         self.timeout_s = timeout_s
         self.t = 0.0
         self.records: dict[int, dict] = {}
         self._uid = 0
+        # default to the handles' shared telemetry so callers building via
+        # build_continuum(telemetry=...) need not pass it twice
+        if telemetry is None:
+            telemetry = next((h.telemetry for h in handles
+                              if h.telemetry is not None), None)
+        self.telemetry = telemetry
+        tr = telemetry.tracer if telemetry is not None else None
+        self._tr = tr if (tr is not None and tr.enabled) else None
 
     def submit(self, server: int, task: int, tokens, max_new_tokens: int,
                t_arrival: float, quality_ok: bool = True, segments=None,
@@ -268,6 +322,14 @@ class Cluster:
             req = Request(self._uid, np.asarray(tokens, np.int32),
                           max_new_tokens=int(max_new_tokens))
         h.enqueue(req, t_arrival + h.uplink_s() + media_delay_s)
+        if self._tr is not None:
+            tr, pid, uid = self._tr, h._pid, self._uid
+            t1 = t_arrival + h.uplink_s()
+            tr.span("uplink", "transfer", t_arrival, t1, pid=pid, tid=uid,
+                    args={"task": int(task)})
+            if media_delay_s:
+                tr.span("media_encode", "transfer", t1,
+                        t1 + media_delay_s, pid=pid, tid=uid)
         self.records[self._uid] = {"uid": self._uid, "task": task,
                                    "server": server, "t_arrival": t_arrival,
                                    "req": req, "quality_ok": bool(quality_ok)}
@@ -313,9 +375,19 @@ class Cluster:
                 timeout = e2e > self.timeout_s
                 success = rec["quality_ok"] and not timeout
                 service = req.e2e_s()
+                if self._tr is not None and not rec.get("spanned"):
+                    rec["spanned"] = True  # collect() may run twice
+                    self._tr.span("downlink", "transfer",
+                                  req.token_times[-1],
+                                  req.token_times[-1] + down,
+                                  pid=h._pid, tid=uid)
+                if self.telemetry is not None:
+                    self.telemetry.join_measured(uid, e2e)
             else:
                 e2e = ttft = 4 * self.timeout_s
                 timeout, success, service = True, False, 0.0
+                if self.telemetry is not None:
+                    self.telemetry.join_measured(uid, e2e, completed=False)
             out.append({"uid": uid, "task": rec["task"],
                         "server": rec["server"], "ttft_s": float(ttft),
                         "e2e_s": float(e2e), "service_s": float(service),
@@ -325,20 +397,45 @@ class Cluster:
 
     def reset(self):
         """Rewind the virtual clock for a fresh replay on warm engines
-        (keeps params and XLA caches — the expensive part)."""
+        (keeps params and XLA caches — the expensive part).  Engine
+        metrics registries (and any attached telemetry's trace + audit)
+        reset too, so per-replay stats stay independent; the engines'
+        ``_traced`` sets are *not* cleared — XLA's compile caches persist
+        across replays, and the ``xla_trace_events`` counters restart at 0
+        against that warm state (the steady-state recompile guard)."""
         for h in self.handles:
             if h.busy() or h.pending:
                 raise RuntimeError("reset() needs a drained cluster")
             h.vtime = 0.0
             h.engine.finished.clear()
+            h.engine.metrics.reset()
             h.engine.reset_prefix_cache()  # replays must be independent
+        if self.telemetry is not None:
+            self.telemetry.reset()
         self.t = 0.0
         self.records = {}
         self._uid = 0  # uids restart so replays compare bit-identically
 
     def latency_stats(self) -> dict:
-        """Per-handle engine stats (virtual-clock seconds)."""
-        return {h.name: h.engine.latency_stats() for h in self.handles}
+        """Per-handle engine stats (virtual-clock seconds), plus per-tier
+        rollups under ``"tiers"``: edge/cloud summaries over the *merged*
+        raw latency samples of each tier's engines (exact percentiles, not
+        averages of per-engine percentiles)."""
+        out = {h.name: h.engine.latency_stats() for h in self.handles}
+        tiers = {}
+        for tier, cloud in (("edge", False), ("cloud", True)):
+            hs = [h for h in self.handles if h.is_cloud == cloud]
+            if not hs:
+                continue
+            tiers[tier] = latency_summary(
+                [v for h in hs for v in h.engine.metrics
+                 .histogram("ttft_s").values],
+                [v for h in hs for v in h.engine.metrics
+                 .histogram("itl_s").values],
+                [v for h in hs for v in h.engine.metrics
+                 .histogram("e2e_s").values])
+        out["tiers"] = tiers
+        return out
 
 
 class EngineBackend:
@@ -395,10 +492,28 @@ class EngineBackend:
         c = int(self.servers.cls[server])
         quality_ok = (not self.failed[server]
                       and int(self.bench.score[task, c]) == 1)
-        self._last_uid = self.cluster.submit(
-            server, task, self.prompt_tokens(task, h.cfg.vocab),
-            self.gen_budget(task, server), t_arrival=self.t,
-            quality_ok=quality_ok)
+        prompt = self.prompt_tokens(task, h.cfg.vocab)
+        budget = self.gen_budget(task, server)
+        tm = self.cluster.telemetry
+        if tm is not None:
+            # predict before submit: the queue term must not include the
+            # request itself.  candidates = what every server would have
+            # predicted, for the audit's why-this-server story.
+            predicted, terms = h.predict_e2e_s(len(prompt), budget)
+            cand = [self.cluster.handles[s].predict_e2e_s(
+                        len(prompt), self.gen_budget(task, s))[0]
+                    for s in range(len(self.cluster.handles))]
+            uid = self.cluster.submit(
+                server, task, prompt, budget, t_arrival=self.t,
+                quality_ok=quality_ok)
+            tm.record_dispatch(task=task, server=server, t=self.t,
+                               predicted_s=predicted, uid=uid, terms=terms,
+                               candidates=cand, policy_est_s=float(lat_e))
+            self._last_uid = uid
+        else:
+            self._last_uid = self.cluster.submit(
+                server, task, prompt, budget, t_arrival=self.t,
+                quality_ok=quality_ok)
         self.t += self.arrival_dt
         self.cluster.advance_to(self.t)
         return lat_e, ok_e, False
@@ -418,12 +533,15 @@ class EngineBackend:
 
 
 def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
-                    fail=(), **engine_kw) -> "list[EngineHandle]":
+                    fail=(), telemetry=None,
+                    **engine_kw) -> "list[EngineHandle]":
     """Live handles for a ``[(class_idx, count), ...]`` spec (the
     ``SYSTEM_CONFIGS`` layout) — pair with
     ``cemllm.make_servers_from_spec`` so the sim table and the engine
     fleet index the same servers.  Class 0/1 are edge tiers on the small
-    config; the last class is the cloud tier on the larger config."""
+    config; the last class is the cloud tier on the larger config.
+    ``telemetry`` (shared across the fleet) turns on lifecycle tracing +
+    the dispatch audit; ``Cluster`` picks it up from the handles."""
     handles = []
     i = 0
     for class_idx, count in spec:
@@ -435,6 +553,6 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
                 f"{'cloud' if cloud else 'edge'}-{i} ({dev_name}/{arch})",
                 arch, cm.DEVICES[dev_name], cm.MODELS[prof_name],
                 is_cloud=cloud, seed=seed + i, fail=i in fail,
-                time_scale=time_scale, **engine_kw))
+                time_scale=time_scale, telemetry=telemetry, **engine_kw))
             i += 1
     return handles

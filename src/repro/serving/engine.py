@@ -51,6 +51,16 @@ each other's prefix-cache blocks exactly like identical text would.
 
 Works for every arch family — per-leaf cache batch dims are keyed by the
 cache layout names in repro/models/api.py.
+
+Observability (repro/serving/telemetry.py): every engine owns a
+``MetricsRegistry`` (request/token counters, TTFT/ITL/e2e histograms,
+KV-pool and XLA-trace views) — ``latency_stats()``/``stats()`` are thin
+views over it.  Passing ``telemetry=`` additionally records request
+lifecycle spans (submit→queue→prefill-chunk[i]→decode→finish) and
+per-tick batch/KV-occupancy counter samples against the engine's clock,
+exportable as Perfetto-loadable Chrome trace JSON
+(``Telemetry.export``).  With ``telemetry=None`` (default) the decode
+hot path performs no tracing work at all beyond plain counter adds.
 """
 from __future__ import annotations
 
@@ -68,6 +78,7 @@ from repro.models.api import Model
 from repro.serving import segments as sg
 from repro.serving.kv_cache import (BlockPool, BlockTable, OutOfPagesError,
                                     kv_page_bytes)
+from repro.serving.telemetry import MetricsRegistry, latency_summary
 
 
 def bucket_length(n: int, *, minimum: int = 16, maximum: int | None = None
@@ -109,6 +120,7 @@ class Request:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
+    t_admit: float = 0.0  # when prefill work started (ends the queue span)
     token_times: list = dataclasses.field(default_factory=list)
     # derived for multimodal requests: [T, d] float32 embedding rows and
     # the [T] bool injection mask handed to the model entry points
@@ -159,7 +171,8 @@ class ServingEngine:
                  prefill_budget: int | None = None,
                  bucket_prompts: bool = True, min_bucket: int = 16,
                  return_logits: bool = False,
-                 clock: "Callable[[], float] | None" = None):
+                 clock: "Callable[[], float] | None" = None,
+                 telemetry=None, trace_name: str = "engine"):
         """``prefill_chunk`` — tokens appended to the cache per chunked
         prefill call (0 disables chunking: one monolithic, still bucketed,
         prefill per admission).  ``prefill_budget`` — prefill tokens spent
@@ -191,6 +204,13 @@ class ServingEngine:
         continuum harness, repro/serving/cluster.py) passes its virtual
         clock instead, so ``latency_stats()`` reports TTFT/ITL/e2e in
         virtual-clock seconds rather than host wall time.
+
+        ``telemetry`` — optional ``repro.serving.telemetry.Telemetry``.
+        When given (and its tracer enabled), the engine records request
+        lifecycle spans and per-tick occupancy counter samples against its
+        clock under process ``trace_name``, and registers its metrics
+        registry for export.  ``None`` keeps tracing fully off: the hot
+        path does a single ``is None`` check and no event allocation.
         """
         self.model = model
         self.params = params
@@ -225,9 +245,36 @@ class ServingEngine:
         self.prefill_tasks: list[_PrefillTask | None] = [None] * max_batch
         self._traced: set = set()  # distinct prefill-path trace shapes
         self._prefill = jax.jit(model.prefill)
-        self.prefill_tokens_computed = 0
-        self.prefill_tokens_padded = 0
-        self.prefix_tokens_reused = 0
+        # ---- metrics registry: counters the hot paths increment directly
+        # (bound attributes, no dict lookups), everything else views/hists.
+        # latency_stats()/stats() are thin views over this registry.
+        self.telemetry = telemetry
+        self.metrics = m = MetricsRegistry()
+        self._c_prefill_computed = m.counter("prefill_tokens_computed")
+        self._c_prefill_padded = m.counter("prefill_tokens_padded")
+        self._c_prefix_reused = m.counter("prefix_tokens_reused")
+        self._c_submitted = m.counter("requests_submitted")
+        self._c_finished = m.counter("requests_finished")
+        self._c_decode_tokens = m.counter("decode_tokens")
+        # new XLA traces since the last metrics.reset() — the steady-state
+        # recompile guard asserts this stays 0 on a warmed engine
+        self._c_trace_events = m.counter("xla_trace_events")
+        self._h_ttft = m.histogram("ttft_s")
+        self._h_itl = m.histogram("itl_s")
+        self._h_e2e = m.histogram("e2e_s")
+        self._h_queue = m.histogram("queue_s")
+        # fraction of the per-tick prefill token budget actually spent
+        # (can slightly exceed 1.0: chunks are charged at bucket size);
+        # observed only on ticks that did prefill work, telemetry only
+        self._h_budget_util = m.histogram("prefill_budget_util")
+        m.view("ticks", lambda: self.ticks)
+        m.view("kv_cache_bytes", self.kv_cache_bytes)
+        m.view("prefill_trace_count", self.prefill_trace_count)
+        tr = telemetry.tracer if telemetry is not None else None
+        self._tr = tr if (tr is not None and tr.enabled) else None
+        self._pid = self._tr.process(trace_name) if self._tr else 0
+        if telemetry is not None:
+            telemetry.register_metrics(trace_name, m)
         if self.paged:
             self.page_size = page_size
             self.max_blocks = -(-max_seq // page_size)
@@ -245,6 +292,12 @@ class ServingEngine:
                     num_pages = 1 + max_batch * self.max_blocks
             self.prefix_caching = prefix_caching
             self.pool = BlockPool(num_pages, page_size)
+            # pool occupancy/hit/eviction/CoW stats as live registry views
+            # (survive reset_prefix_cache swapping the pool object)
+            for key in ("num_pages", "block_size", "pages_in_use",
+                        "pages_cached", "prefix_hits", "prefix_misses",
+                        "evictions", "cow_copies"):
+                m.view(key, lambda k=key: self.pool.stats()[k])
             abstract = model.abstract_paged_cache(num_pages, page_size,
                                                   kv_dtype=kv_dtype)
             self.cache = {name: jnp.zeros(s.shape, s.dtype)
@@ -350,9 +403,20 @@ class ServingEngine:
         batch["embeds"], batch["embed_mask"] = e, m
         return True
 
+    def _note_trace(self, key: tuple):
+        """Book a prefill-path shape about to be handed to XLA.  First
+        sightings bump the ``xla_trace_events`` counter — the signal the
+        steady-state recompile guard gates on (``metrics.reset()`` zeroes
+        the counter but never ``self._traced``, matching XLA's persistent
+        compile cache)."""
+        if key not in self._traced:
+            self._traced.add(key)
+            self._c_trace_events.inc()
+
     def _admit_dense(self, slot: int, req: Request) -> "int | None":
         """Monolithic (bucketed) prefill into a dense slot; returns the
         first sampled token."""
+        req.t_admit = self._now()
         T = len(req.tokens)
         Sb = self._bucket(T)
         batch = {"tokens": self._padded_prompt(req.tokens, Sb),
@@ -360,11 +424,11 @@ class ServingEngine:
         if self.bucketing:
             batch["length"] = jnp.asarray([T], jnp.int32)
         mm = self._with_embeds(batch, req, 0, T, Sb)
-        self._traced.add(("prefill", Sb, mm))
+        self._note_trace(("prefill", Sb, mm))
         logits, rc = self._prefill(self.params, batch)
         self._splice(slot, rc, T)
-        self.prefill_tokens_computed += T
-        self.prefill_tokens_padded += Sb - T
+        self._c_prefill_computed.inc(T)
+        self._c_prefill_padded.inc(Sb - T)
         return int(jnp.argmax(logits[0]))
 
     # ----------------------------------------------------- paged internals
@@ -489,6 +553,7 @@ class ServingEngine:
         reserved = self._reserve_table(req)
         if reserved is None:
             return None
+        req.t_admit = self._now()
         table, n_reuse = reserved
         toks = np.asarray(req.tokens, np.int64)
         T = len(toks)
@@ -500,7 +565,7 @@ class ServingEngine:
             if self.bucketing:
                 batch["length"] = jnp.asarray([T], jnp.int32)
             mm = self._with_embeds(batch, req, 0, T, Sb)
-            self._traced.add(("prefill", Sb, mm))
+            self._note_trace(("prefill", Sb, mm))
             logits, rc = self._prefill(self.params, batch)
             sk, sv = rc["k"], rc["v"]  # [L, 1, Sb, Hkv, Dh]
         else:
@@ -522,14 +587,14 @@ class ServingEngine:
             if self.bucketing:
                 batch["length"] = jnp.asarray([n_sfx], jnp.int32)
             mm = self._with_embeds(batch, req, n_reuse, T, Sb)
-            self._traced.add(("prefill_sfx", n_reuse, Sb, mm))
+            self._note_trace(("prefill_sfx", n_reuse, Sb, mm))
             logits, (sk, sv) = self._prefill_sfx(self.params, batch, pk, pv)
         self._scatter_kv(table, np.arange(n_reuse, T), sk, sv, n_sfx)
         if self.prefix_caching:
             self.pool.register_prefix(toks, table.pages[:T // self.page_size])
-        self.prefill_tokens_computed += n_sfx
-        self.prefill_tokens_padded += Sb - n_sfx
-        self.prefix_tokens_reused += n_reuse
+        self._c_prefill_computed.inc(n_sfx)
+        self._c_prefill_padded.inc(Sb - n_sfx)
+        self._c_prefix_reused.inc(n_reuse)
         self.block_tables[slot] = table
         self.tables[slot] = table.as_row(self.max_blocks)
         return int(jnp.argmax(logits[0]))
@@ -554,13 +619,14 @@ class ServingEngine:
             table, n_reuse = reserved
             self.block_tables[slot] = table
             self.tables[slot] = table.as_row(self.max_blocks)
-            self.prefix_tokens_reused += n_reuse
+            self._c_prefix_reused.inc(n_reuse)
         else:
             n_reuse = 0
             # chunk writes no longer overwrite the whole slot region, so
             # stale pos_map entries from the previous occupant must be
             # cleared up front (stale K/V is then masked everywhere)
             self.cache["pos_map"] = self.cache["pos_map"].at[slot].set(-1)
+        req.t_admit = self._now()
         self.prefill_tasks[slot] = _PrefillTask(req, done=n_reuse,
                                                 reused=n_reuse)
         return True
@@ -584,12 +650,18 @@ class ServingEngine:
         else:
             batch["slot"] = jnp.asarray(slot, jnp.int32)
         mm = self._with_embeds(batch, req, task.done, task.done + n, Cb)
-        self._traced.add(("prefill_chunk", Cb, mm))
+        self._note_trace(("prefill_chunk", Cb, mm))
+        t0 = self._now() if self._tr is not None else 0.0
         task.logits, self.cache = self._prefill_chunk(
             self.params, self.cache, batch)
+        if self._tr is not None:
+            self._tr.span("prefill_chunk", "prefill", t0, self._now(),
+                          pid=self._pid, tid=req.uid,
+                          args={"tokens": n, "done": task.done + n,
+                                "total": T})
         task.done += n
-        self.prefill_tokens_computed += n
-        self.prefill_tokens_padded += Cb - n
+        self._c_prefill_computed.inc(n)
+        self._c_prefill_padded.inc(Cb - n)
         if self.paged and self.prefix_caching:
             # publish fully-written prompt blocks as they complete, so a
             # request admitted later this tick already hits them
@@ -633,7 +705,10 @@ class ServingEngine:
                 progressed = True
             self._progress |= progressed
             if not progressed:
-                return
+                break
+        spent = self.prefill_budget - budget
+        if spent and self.telemetry is not None:
+            self._h_budget_util.observe(spent / self.prefill_budget)
 
     # ------------------------------------------------------------- public
     def busy(self) -> bool:
@@ -666,7 +741,34 @@ class ServingEngine:
         if len(req.tokens) < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
         req.t_submit = self._now()
+        self._c_submitted.inc()
+        if self._tr is not None:
+            self._tr.instant("submit", "lifecycle", req.t_submit,
+                             pid=self._pid, tid=req.uid)
         self.queue.append(req)
+
+    def _finish(self, req: Request):
+        """Request complete: move to ``finished``, fold its latencies into
+        the registry histograms (so ``latency_stats`` survives drain loops
+        popping ``self.finished``), and emit its lifecycle spans."""
+        req.done = True
+        self.finished.append(req)
+        self._c_finished.inc()
+        tt = req.token_times
+        ta = req.t_admit if req.t_admit >= req.t_submit else req.t_submit
+        self._h_queue.observe(ta - req.t_submit)
+        self._h_ttft.observe(tt[0] - req.t_submit)
+        self._h_e2e.observe(tt[-1] - req.t_submit)
+        if len(tt) > 1:
+            self._h_itl.extend(b - a for a, b in zip(tt, tt[1:]))
+        tr = self._tr
+        if tr is not None:
+            pid, tid = self._pid, req.uid
+            tr.span("queue", "lifecycle", req.t_submit, ta, pid=pid, tid=tid)
+            tr.span("prefill", "lifecycle", ta, tt[0], pid=pid, tid=tid,
+                    args={"prompt_tokens": len(req.tokens)})
+            tr.span("decode", "lifecycle", tt[0], tt[-1], pid=pid, tid=tid,
+                    args={"new_tokens": len(req.output)})
 
     def _activate(self, slot: int, req: Request, first_tok: int):
         """Install an admitted request into its decode slot, honoring EOS
@@ -677,8 +779,7 @@ class ServingEngine:
         req.token_times.append(self._now())
         if (req.max_new_tokens <= 1
                 or (self.eos_id is not None and first_tok == self.eos_id)):
-            req.done = True
-            self.finished.append(req)
+            self._finish(req)
             if self.paged and self.block_tables[slot] is not None:
                 self.block_tables[slot].free()
                 self.block_tables[slot] = None
@@ -725,6 +826,8 @@ class ServingEngine:
             self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         n_prefilling = sum(t is not None for t in self.prefill_tasks)
+        if self._tr is not None and (active or n_prefilling):
+            self._sample_tick(len(active), n_prefilling)
         if not active:
             if n_prefilling:
                 self.ticks += 1
@@ -752,12 +855,17 @@ class ServingEngine:
             pos[pos >= self.max_seq] = 0  # clamp masked rows (null table)
             batch["pos"] = jnp.asarray(pos, jnp.int32)
             batch["block_tables"] = jnp.asarray(tables)
+        t0 = self._now() if self._tr is not None else 0.0
         out, self.cache = self._step(self.params, self.cache, batch)
         # default path: ``out`` is already the [B] argmax token ids,
         # computed on device — one int32 per slot crosses the host link
         nxt = np.asarray(jnp.argmax(out, -1) if self.return_logits else out)
         self.ticks += 1
+        self._c_decode_tokens.inc(len(active))
         t_now = self._now()
+        if self._tr is not None:
+            self._tr.span("decode_tick", "engine", t0, t_now, pid=self._pid,
+                          args={"active": len(active)})
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
@@ -767,10 +875,20 @@ class ServingEngine:
             self.budget[i] -= 1
             if (self.budget[i] <= 0 or tok == self.eos_id
                     or self.pos[i] >= self.max_seq - 1):
-                req.done = True
-                self.finished.append(req)
+                self._finish(req)
                 self._free_slot(i)  # free slot/pages (continuous batching)
         return len(active) + n_prefilling
+
+    def _sample_tick(self, n_active: int, n_prefilling: int):
+        """Per-tick occupancy counter samples (tracing enabled only)."""
+        tr, now = self._tr, self._now()
+        tr.counter("batch_occupancy", now,
+                   {"decoding": n_active, "prefilling": n_prefilling},
+                   pid=self._pid)
+        if self.paged:
+            tr.counter("kv_pages", now,
+                       {"in_use": self.pool.pages_in_use(),
+                        "cached": len(self.pool.lru)}, pid=self._pid)
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           keep_finished: bool = False):
@@ -816,6 +934,19 @@ class ServingEngine:
         self.pool = BlockPool(self.pool.num_pages, self.page_size)
 
     # -------------------------------------------------------------- stats
+    # back-compat: these were plain attributes before the registry existed
+    @property
+    def prefill_tokens_computed(self) -> int:
+        return self._c_prefill_computed.value
+
+    @property
+    def prefill_tokens_padded(self) -> int:
+        return self._c_prefill_padded.value
+
+    @property
+    def prefix_tokens_reused(self) -> int:
+        return self._c_prefix_reused.value
+
     def kv_cache_bytes(self) -> int:
         """Current KV-cache footprint (allocated device arrays)."""
         return sum(int(np.prod(v.shape)) * v.dtype.itemsize
@@ -840,31 +971,23 @@ class ServingEngine:
         return out
 
     def latency_stats(self) -> dict:
-        """TTFT / inter-token / end-to-end latency percentiles (seconds)
-        over finished requests (call before ``run_until_drained`` pops
-        them).  Timestamps come from the engine's ``clock``: wall seconds
-        by default, **virtual-clock seconds** when an external driver (the
-        continuum harness) steps the engine under its own clock."""
-        done = [r for r in self.finished if r.token_times]
-        ttft = [r.ttft_s() for r in done]
-        itl = [d for r in done for d in r.itl_s()]
-        e2e = [r.e2e_s() for r in done]
-        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
-        return {"n_requests": len(done),
-                "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
-                "itl_p50_s": pct(itl, 50), "itl_p95_s": pct(itl, 95),
-                "e2e_p50_s": pct(e2e, 50), "e2e_p95_s": pct(e2e, 95),
-                "e2e_mean_s": float(np.mean(e2e)) if e2e else 0.0}
+        """TTFT / inter-token / end-to-end latency percentiles (seconds) —
+        a thin view over the metrics registry's ``ttft_s``/``itl_s``/
+        ``e2e_s`` histograms, observed as each request finishes (so the
+        numbers survive ``run_until_drained`` popping ``self.finished``;
+        accumulation is scoped by ``metrics.reset()``, which
+        ``Cluster.reset`` calls between replays).  Timestamps come from
+        the engine's ``clock``: wall seconds by default, **virtual-clock
+        seconds** when an external driver (the continuum harness) steps
+        the engine under its own clock."""
+        return latency_summary(self._h_ttft.values, self._h_itl.values,
+                               self._h_e2e.values)
 
     def stats(self) -> dict:
-        out = {"ticks": self.ticks, "paged": self.paged,
-               "kv_dtype": self.kv_dtype,
-               "kv_cache_bytes": self.kv_cache_bytes(),
-               "bucketed": self.bucketing, "chunked": self.chunked,
-               "prefill_trace_count": self.prefill_trace_count(),
-               "prefill_tokens_computed": self.prefill_tokens_computed,
-               "prefill_tokens_padded": self.prefill_tokens_padded}
-        if self.paged:
-            out.update(self.pool.stats(),
-                       prefix_tokens_reused=self.prefix_tokens_reused)
+        """Static engine configuration plus a full metrics-registry
+        snapshot (counters as ints, histograms as summary dicts, pool/
+        trace views evaluated live)."""
+        out = {"paged": self.paged, "kv_dtype": self.kv_dtype,
+               "bucketed": self.bucketing, "chunked": self.chunked}
+        out.update(self.metrics.snapshot())
         return out

@@ -118,7 +118,7 @@ class QLMIORouter:
     def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
                  *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
                  policy=None, prefix_hit_pred=None, prefill_pred=None,
-                 media_pred=None):
+                 media_pred=None, telemetry=None):
         """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
         P(success).  ``policy`` optionally overrides the scoring rule with a
         trained QLMIO agent's argmax.
@@ -140,6 +140,12 @@ class QLMIORouter:
         uplink vs. raw-media uplink + destination encode), so servers
         behind thin links are charged for the bytes the task's media
         actually puts on them.
+
+        ``telemetry`` (repro/serving/telemetry.Telemetry) optionally
+        audits every ``dispatch``: the chosen server, its predicted
+        latency, every candidate's effective latency, and — this path
+        executes synchronously — the measured latency, joined
+        immediately.
         """
         self.servers = servers
         self.milp = milp_pred
@@ -150,6 +156,7 @@ class QLMIORouter:
         self.prefix_hit_pred = prefix_hit_pred
         self.prefill_pred = prefill_pred
         self.media_pred = media_pred
+        self.telemetry = telemetry
         self.health = HealthTracker(len(servers))
         self.queue_s = np.zeros(len(servers))
         self.now = 0.0
@@ -265,6 +272,14 @@ class QLMIORouter:
                 else:
                     self.queue_s[s2] += lat2  # losing hedge did the work
         total = lat + self.queue_s[s]
+        if self.telemetry is not None:
+            uid = self.telemetry.record_dispatch(
+                task=task, server=s, t=self.now,
+                predicted_s=t_eff[s] + self.queue_s[s],
+                terms={"queue": float(self.queue_s[s]),
+                       "latency": float(t_eff[s])},
+                candidates=list(t_eff + self.queue_s))
+            self.telemetry.join_measured(uid, total, completed=ok)
         self.queue_s[s] += lat
         self.health.record(s, lat, ok, self.now)
         self.now += 0.1

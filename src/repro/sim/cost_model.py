@@ -208,6 +208,35 @@ def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
     return 2.0 * model.n_active * tokens / (device.flops * _EFF)
 
 
+def latency_terms(device: DeviceProfile, model: ModelProfile, prompt_tokens,
+                  difficulty, rng: np.random.Generator | None = None,
+                  prefix_hit_rate=0.0, prefill_chunk: int | None = None,
+                  kv_dtype: str | None = None) -> dict:
+    """Per-term decomposition of the roofline latency — the breakdown the
+    telemetry dispatch audit records per routed request
+    (repro/serving/telemetry.DispatchRecord).  ``latency_s`` is the summed
+    view; the op order here is identical, so ``total_s`` matches it
+    bit-for-bit under every knob combination.
+    """
+    hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
+    prefill = prefill_s(device, model, prompt_tokens,
+                        prefill_chunk=prefill_chunk) * (1.0 - hit)
+    out_tok = expected_out_tokens(model, np.asarray(difficulty))
+    if rng is not None:
+        out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))
+    if kv_dtype is None:
+        decode = decode_s(device, model, out_tok)
+    else:
+        ctx = np.asarray(prompt_tokens, float) + out_tok / 2.0
+        decode = decode_s(device, model, out_tok, context_tokens=ctx,
+                          kv_dtype=kv_dtype)
+    # request up + (byte-free) response down == payload/bw + rtt, the
+    # historical transmission term
+    trans = uplink_s(_PAYLOAD, device) + downlink_s(0.0, device)
+    return {"prefill_s": prefill, "decode_s": decode, "link_s": trans,
+            "total_s": prefill + decode + trans}
+
+
 def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
               difficulty, rng: np.random.Generator | None = None,
               prefix_hit_rate=0.0, prefill_chunk: int | None = None,
@@ -229,23 +258,14 @@ def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
     (prompt + the mean half of the answer so far) at
     ``kv_bytes_per_token(model, kv_dtype)`` — the bytes/token → decode_s
     → router-score chain int8 KV compresses.
+
+    See ``latency_terms`` for the per-term decomposition the telemetry
+    dispatch audit records.
     """
-    hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
-    prefill = prefill_s(device, model, prompt_tokens,
-                        prefill_chunk=prefill_chunk) * (1.0 - hit)
-    out_tok = expected_out_tokens(model, np.asarray(difficulty))
-    if rng is not None:
-        out_tok = out_tok * rng.lognormal(0.0, 0.35, np.shape(out_tok))
-    if kv_dtype is None:
-        decode = decode_s(device, model, out_tok)
-    else:
-        ctx = np.asarray(prompt_tokens, float) + out_tok / 2.0
-        decode = decode_s(device, model, out_tok, context_tokens=ctx,
-                          kv_dtype=kv_dtype)
-    # request up + (byte-free) response down == payload/bw + rtt, the
-    # historical transmission term
-    trans = uplink_s(_PAYLOAD, device) + downlink_s(0.0, device)
-    return prefill + decode + trans
+    return latency_terms(device, model, prompt_tokens, difficulty, rng=rng,
+                         prefix_hit_rate=prefix_hit_rate,
+                         prefill_chunk=prefill_chunk,
+                         kv_dtype=kv_dtype)["total_s"]
 
 
 def success_prob(model: ModelProfile, difficulty, affinity=0.0) -> np.ndarray:

@@ -1,0 +1,268 @@
+"""Continuum telemetry layer (ISSUE-6 tentpole).
+
+Covers the metrics registry primitives, Chrome-trace schema + lifecycle
+span ordering under the virtual clock, zero-cost-when-disabled on the
+decode hot path, dispatch-audit join correctness, the steady-state
+recompile guard (warmed engines re-traced nothing across a mixed
+replay), per-tier latency rollups, and the trace_report CLI.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.cluster import Cluster, build_continuum
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.telemetry import (
+    MetricsRegistry,
+    Telemetry,
+    latency_summary,
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SPEC = [(2, 1), (1, 1)]  # 1 cloud + 1 gpu edge
+
+
+@pytest.fixture(scope="module")
+def traced_world():
+    """Small continuum with tracing on + one mixed replay already run."""
+    tm = Telemetry(trace=True)
+    handles = build_continuum(SPEC, seed=0, max_batch=2, max_seq=96,
+                              telemetry=tm)
+    cluster = Cluster(handles)
+    _mixed_replay(cluster)
+    return tm, cluster
+
+
+def _mixed_replay(cluster, n_tasks: int = 6):
+    """Submit a small spread of requests across both engines with audited
+    predictions, drain, and collect — returns the measured records."""
+    tm = cluster.telemetry
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(n_tasks):
+        s = i % len(cluster.handles)
+        h = cluster.handles[s]
+        toks = rng.integers(1, h.cfg.vocab, 6 + 4 * (i % 3)).astype(np.int32)
+        predicted, terms = h.predict_e2e_s(len(toks), 4)
+        uid = cluster.submit(s, task=i, tokens=toks, max_new_tokens=4,
+                             t_arrival=t)
+        if tm is not None:
+            tm.record_dispatch(task=i, server=s, t=t, predicted_s=predicted,
+                               uid=uid, terms=terms)
+        t += 0.05
+        cluster.advance_to(t)
+    cluster.drain()
+    return cluster.collect()
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_primitives():
+    m = MetricsRegistry()
+    c = m.counter("hits")
+    c.inc()
+    c.inc(3)
+    g = m.gauge("depth")
+    g.set(7.5)
+    h = m.histogram("lat")
+    h.extend([1.0, 2.0, 3.0, 4.0])
+    m.view("twice_hits", lambda: 2 * c.value)
+    snap = m.snapshot()
+    assert snap["hits"] == 4
+    assert snap["depth"] == 7.5
+    assert snap["twice_hits"] == 8
+    assert snap["lat"]["count"] == 4
+    assert snap["lat"]["p50"] == pytest.approx(2.5)
+    # same name returns the same instrument, not a fresh one
+    assert m.counter("hits") is c
+    # reset zeroes stored instruments but keeps live views
+    m.reset()
+    assert c.value == 0 and h.count == 0
+    assert m.snapshot()["twice_hits"] == 0
+
+
+def test_latency_summary_shape():
+    out = latency_summary([1.0, 2.0], [0.1, 0.2, 0.3], [2.0, 4.0])
+    assert out["n_requests"] == 2
+    assert out["ttft_p50_s"] == pytest.approx(1.5)
+    assert out["e2e_mean_s"] == pytest.approx(3.0)
+    empty = latency_summary([], [], [])
+    assert empty["n_requests"] == 0 and empty["e2e_p95_s"] == 0.0
+
+
+# ------------------------------------------------------------ trace schema
+
+
+def test_trace_schema_and_lifecycle_ordering(traced_world, tmp_path):
+    tm, cluster = traced_world
+    trace = tm.to_json()
+    events = trace["traceEvents"]
+    assert events, "tracing was enabled but no events were recorded"
+    # Chrome trace-event schema: every event carries ph/name/ts/pid/tid
+    for ev in events:
+        assert ev["ph"] in ("X", "i", "C", "M")
+        assert "name" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    # process metadata names both engines
+    names = {ev["args"]["name"] for ev in events
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert {h.name for h in cluster.handles} <= names
+
+    # per-request lifecycle: uplink -> queue -> prefill -> decode ->
+    # downlink, each span starting no earlier than the previous one
+    order = ["uplink", "queue", "prefill", "decode", "downlink"]
+    by_req: dict = {}
+    for ev in events:
+        if ev["ph"] == "X" and ev["name"] in order:
+            by_req.setdefault((ev["pid"], ev["tid"]), {})[ev["name"]] = ev
+    assert by_req, "no lifecycle spans recorded"
+    for key, stages in by_req.items():
+        assert set(stages) == set(order), f"request {key} missing stages"
+        seq = [stages[n] for n in order]
+        for a, b in zip(seq, seq[1:]):
+            assert a["ts"] <= b["ts"], f"{a['name']} starts after {b['name']}"
+            # spans chain: each stage begins where the previous one ended
+            assert a["ts"] + a["dur"] <= b["ts"] + 1, \
+                f"{a['name']} overlaps into {b['name']}"
+
+    # engine ticks carry real virtual durations and are monotone per pid
+    ticks: dict = {}
+    for ev in events:
+        if ev["ph"] == "X" and ev["name"] == "tick":
+            ticks.setdefault(ev["pid"], []).append(ev["ts"])
+    assert ticks
+    for ts in ticks.values():
+        assert ts == sorted(ts)
+
+    # the export round-trips as plain JSON (Perfetto-loadable)
+    path = tmp_path / "trace.json"
+    tm.export(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["displayTimeUnit"] == "ms"
+    assert len(loaded["traceEvents"]) == len(events)
+
+
+def test_trace_report_cli(traced_world, tmp_path):
+    from scripts.trace_report import main, report
+
+    tm, _ = traced_world
+    path = tmp_path / "trace.json"
+    tm.export(str(path))
+    out = report(json.loads(path.read_text()))
+    assert "per-stage latency decomposition" in out
+    assert "lifecycle/decode" in out and "transfer/uplink" in out
+    assert "per-engine utilization" in out
+    assert "cost-model calibration" in out
+    assert main([str(path), "--top", "3"]) == 0
+
+
+# ------------------------------------------------------- disabled-mode off
+
+
+def test_disabled_telemetry_records_no_events():
+    """Telemetry(trace=False) keeps the audit but allocates zero trace
+    events; telemetry=None leaves the engine's tracer hook unset."""
+    tm = Telemetry(trace=False)
+    handles = build_continuum(SPEC[:1], seed=0, max_batch=2, max_seq=96,
+                              telemetry=tm)
+    cluster = Cluster(handles)
+    recs = _mixed_replay(cluster, n_tasks=2)
+    assert len(recs) == 2 and all(r["success"] for r in recs)
+    assert tm.tracer.events == []          # no spans, ever
+    assert tm.prediction_error()["n"] == 2  # ... but the audit still joins
+
+    # hot-path guard: with no telemetry at all the engine keeps no tracer
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    eng = ServingEngine(model, model.init(jax.random.PRNGKey(0)),
+                        max_batch=2, max_seq=64)
+    assert eng._tr is None
+    req = Request(0, np.arange(1, 9).astype(np.int32), max_new_tokens=4)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done and eng._tr is None
+
+
+# ------------------------------------------------------------------- audit
+
+
+def test_audit_join_and_prediction_error():
+    tm = Telemetry(trace=False)
+    u1 = tm.record_dispatch(task=1, server=0, t=0.0, predicted_s=2.0,
+                            terms={"queue": 0.5, "decode": 1.5})
+    u2 = tm.record_dispatch(task=2, server=1, t=0.1, predicted_s=1.0)
+    u3 = tm.record_dispatch(task=3, server=0, t=0.2, predicted_s=5.0)
+    tm.join_measured(u1, 1.0)            # +100% error
+    tm.join_measured(u2, 2.0)            # -50% error
+    tm.join_measured(u3, 9.0, completed=False)  # timeout: excluded
+    recs = {r.uid: r for r in tm.audit_records()}
+    assert recs[u1].terms["decode"] == 1.5
+    assert recs[u1].measured_e2e_s == 1.0
+    assert not recs[u3].completed
+    err = tm.prediction_error()
+    assert err["n"] == 2
+    assert err["mean_abs_pct_err"] == pytest.approx(75.0)
+    assert err["mean_signed_pct_err"] == pytest.approx(25.0)
+    tm.reset()
+    assert tm.prediction_error()["n"] == 0 and tm.audit_records() == []
+
+
+def test_cluster_joins_measured_e2e(traced_world):
+    """Every audited dispatch from the replay got its measured e2e joined
+    at collect() and the prediction-error metric is well-formed."""
+    tm, _ = traced_world
+    recs = tm.audit_records()
+    assert recs and all(r.completed and r.measured_e2e_s is not None
+                        for r in recs)
+    err = tm.prediction_error()
+    assert err["n"] == len(recs)
+    assert err["mean_abs_pct_err"] >= 0.0
+    assert err["p95_abs_pct_err"] >= err["p50_abs_pct_err"] >= 0.0
+
+
+# ------------------------------------------------- stats + tier rollups
+
+
+def test_stats_are_registry_views(traced_world):
+    tm, cluster = traced_world
+    eng = cluster.handles[0].engine
+    stats = eng.stats()
+    for key in ("prefill_tokens_computed", "requests_finished",
+                "xla_trace_events", "ticks"):
+        assert key in stats
+    # back-compat attribute accessors mirror the registry counters
+    assert eng.prefill_tokens_computed == stats["prefill_tokens_computed"]
+    ls = cluster.latency_stats()
+    assert "tiers" in ls
+    for tier in ("edge", "cloud"):
+        assert ls["tiers"][tier]["n_requests"] >= 1
+    # the tier rollup merges raw per-engine histograms: total matches
+    total = sum(ls[h.name]["n_requests"] for h in cluster.handles)
+    assert sum(t["n_requests"] for t in ls["tiers"].values()) == total
+
+
+# -------------------------------------------------- recompile-guard test
+
+
+def test_steady_state_no_recompiles(traced_world):
+    """A warmed engine replaying a same-shaped mixed workload must trigger
+    zero new XLA traces: the recompile-event counter stays 0 across the
+    second replay and the jit cache sizes do not grow."""
+    tm, cluster = traced_world
+    cluster.reset()  # zeroes metrics; XLA caches + _traced persist
+    sizes_before = [h.engine.jit_cache_sizes() for h in cluster.handles]
+    recs = _mixed_replay(cluster)
+    assert all(r["success"] for r in recs)
+    for h, before in zip(cluster.handles, sizes_before):
+        assert h.engine.metrics.snapshot()["xla_trace_events"] == 0, \
+            f"{h.name} re-traced in steady state"
+        assert h.engine.jit_cache_sizes() == before
