@@ -43,10 +43,20 @@ PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig10_continuum_replay.py \
     --trace results/fig10_trace.json
 python scripts/trace_report.py results/fig10_trace.json
 
+# disaggregated prefill/decode smoke with tracing: QLMIO extended with
+# KV migration (prefill-here/decode-there dispatch + mid-stream
+# evacuation) must beat static QLMIO on mean e2e at an equal-or-better
+# completion rate, with at least one charged kv_migrate span in the
+# exported trace (also a CI artifact)
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig12_disaggregation.py \
+    --smoke --trace results/fig12_trace.json
+python scripts/trace_report.py results/fig12_trace.json
+
 # benchmark regression gate: kernel/serving numbers + the fig10 replay's
-# cost_model.mean_abs_pct_err, all vs. benchmarks/baseline.json
+# cost_model.mean_abs_pct_err + the fig12 migration headline metrics,
+# all vs. benchmarks/baseline.json
 python scripts/check_bench.py results/bench.json \
-    results/fig10_continuum_replay.json
+    results/fig10_continuum_replay.json results/fig12_disaggregation.json
 
 # multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
 # ship vs edge-encode) must beat both fixed policies on mean e2e latency

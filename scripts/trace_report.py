@@ -98,6 +98,26 @@ def engine_utilization(trace: dict, buckets: int = 20) -> "list[dict]":
     return out
 
 
+def migration_traffic(trace: dict) -> "dict[str, dict]":
+    """KV pages moved per engine, from ``kv_migrate`` spans: bytes/pages
+    received (the span's pid is the destination) and sent (matched on the
+    span's ``src`` process name)."""
+    names = process_names(trace)
+    traffic: dict = defaultdict(lambda: {"in_bytes": 0, "out_bytes": 0,
+                                         "in_pages": 0, "moves": 0})
+    for ev in spans(trace):
+        if ev["name"] != "kv_migrate":
+            continue
+        a = ev.get("args", {})
+        dst = traffic[names.get(ev["pid"], f"pid{ev['pid']}")]
+        dst["in_bytes"] += int(a.get("bytes", 0))
+        dst["in_pages"] += int(a.get("pages", 0))
+        dst["moves"] += 1
+        if a.get("src"):
+            traffic[a["src"]]["out_bytes"] += int(a.get("bytes", 0))
+    return dict(traffic)
+
+
 def slow_requests(trace: dict, top: int = 5) -> "list[dict]":
     """Top-N slowest requests by summed lifecycle+transfer span time on
     their (engine, request-uid) thread."""
@@ -139,6 +159,17 @@ def report(trace: dict, top: int = 5) -> str:
     for u in util:
         lines.append(f"{u['engine']:<36}{100 * u['busy_frac']:>6.1f}%  "
                      f"[{_bar(u['timeline'])}]")
+
+    traffic = migration_traffic(trace)
+    if traffic:
+        lines.append("")
+        lines.append("== kv migration traffic (wire bytes, destination "
+                     "precision) ==")
+        for name in sorted(traffic):
+            t = traffic[name]
+            lines.append(f"{name:<36} in {t['in_bytes']:>9} B "
+                         f"({t['in_pages']} pages, {t['moves']} moves)  "
+                         f"out {t['out_bytes']:>9} B")
 
     slow = slow_requests(trace, top)
     lines.append("")

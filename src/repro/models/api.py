@@ -24,13 +24,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import lm
 from repro.models import mamba2 as m2
 from repro.models import xlstm as xl
 from repro.kernels.paged_decode import paged_decode_quant_tpu, paged_decode_tpu
-from repro.kernels.quant import quantize_kv
+from repro.kernels.quant import dequantize_kv, quantize_kv
 from repro.models.attention import (chunk_prefill_attention, decode_attention,
                                     flash_attention,
                                     paged_chunk_prefill_attention,
@@ -187,6 +188,76 @@ class Model:
                     "v_scales": _sds(shape[:-1], jnp.float32)}
         return {"k_pages": _sds(shape, jnp.bfloat16),
                 "v_pages": _sds(shape, jnp.bfloat16)}
+
+    @property
+    def kv_geometry(self) -> "tuple[int, int, int]":
+        """(n_layers, n_kv_heads, head_dim) — the paged page shape minus
+        the page axes; the structural compatibility key a ``KVSnapshot``
+        carries for cross-engine migration."""
+        cfg = self.cfg
+        return (cfg.n_layers, cfg.n_kv_heads, cfg.hd)
+
+    def export_paged_kv(self, cache, pages) -> "dict":
+        """Gather ``pages`` (a request's block table, in logical block
+        order) out of the paged pool to host numpy — one leaf per cache
+        leaf, page axis reordered to logical blocks: ``k_pages``/
+        ``v_pages`` ``[L, NB, bs, Hkv, Dh]`` plus ``k_scales``/
+        ``v_scales`` ``[L, NB, bs, Hkv]`` when the pool is int8.  The
+        storage form is exported verbatim (int8 rows + scales untouched),
+        so a same-precision import reads bit-identical cache values."""
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        return {name: np.asarray(leaf[:, idx])
+                for name, leaf in cache.items()}
+
+    def import_paged_kv(self, cache, pages, leaves, src_dtype: str, *,
+                        from_block: int = 0):
+        """Scatter exported logical blocks ``[from_block, from_block +
+        len(pages))`` of ``leaves`` (``export_paged_kv`` layout) into this
+        pool at page ids ``pages``, converting precision when the source
+        form disagrees with the pool:
+
+          * int8 -> int8 / bf16 -> bf16: verbatim rows (and scales), so
+            decode reads exactly what the source engine would have read —
+            the bit-identical-migration contract;
+          * bf16 -> int8: the same write-then-quantize recipe as the
+            engine's scatter path (quantize exact bf16 rows, scales ride
+            at the same indices) — identical to having quantized at the
+            source, so pricing the transfer at the destination's byte
+            width loses nothing;
+          * int8 -> bf16: rows dequantize through the same kernel-shared
+            helper the fused decode paths use.
+        """
+        quant = "k_scales" in cache
+        lo, hi = from_block, from_block + len(pages)
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        k, v = leaves["k_pages"], leaves["v_pages"]
+        if src_dtype == "int8" and quant:
+            upd = {name: np.asarray(leaves[name][:, lo:hi])
+                   for name in ("k_pages", "v_pages", "k_scales",
+                                "v_scales")}
+        elif src_dtype == "int8":
+            upd = {"k_pages": dequantize_kv(jnp.asarray(k[:, lo:hi]),
+                                            jnp.asarray(
+                                                leaves["k_scales"][:, lo:hi]),
+                                            dtype=jnp.bfloat16),
+                   "v_pages": dequantize_kv(jnp.asarray(v[:, lo:hi]),
+                                            jnp.asarray(
+                                                leaves["v_scales"][:, lo:hi]),
+                                            dtype=jnp.bfloat16)}
+        elif quant:
+            k8, ks = quantize_kv(jnp.asarray(k[:, lo:hi]))
+            v8, vs = quantize_kv(jnp.asarray(v[:, lo:hi]))
+            upd = {"k_pages": k8, "v_pages": v8,
+                   "k_scales": ks, "v_scales": vs}
+        else:
+            upd = {"k_pages": np.asarray(k[:, lo:hi]),
+                   "v_pages": np.asarray(v[:, lo:hi])}
+        out = dict(cache)
+        for name, val in upd.items():
+            leaf = cache[name]
+            out[name] = leaf.at[:, idx].set(
+                jnp.asarray(val).astype(leaf.dtype))
+        return out
 
     # ------------------------------------------------------------- prefill
     @property

@@ -56,6 +56,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import ceil_blocks
 from repro.serving.router import ServerHandle
 from repro.serving.telemetry import latency_summary
 from repro.sim import cost_model as cm
@@ -130,6 +131,14 @@ class EngineHandle(ServerHandle):
         self.fail = fail
         self.pending: list = []  # min-heap of (t_ready, seq, Request)
         self._seq = 0
+        # invoked after every charged engine tick (Cluster wires this to
+        # its migration scheduler so planned evacuations fire between
+        # ticks, at a consistent engine state)
+        self.on_step = None
+        # KV pages moved to / from other engines, in wire bytes (priced
+        # at the *receiving* side's page precision)
+        self._c_mig_in = self.engine.metrics.counter("kv_migrate_in_bytes")
+        self._c_mig_out = self.engine.metrics.counter("kv_migrate_out_bytes")
         super().__init__(name=name,
                          model_id=cm.MODEL_IDS.index(profile.name),
                          device_id=cm.DEVICE_IDS.index(device.name),
@@ -142,6 +151,19 @@ class EngineHandle(ServerHandle):
 
     def downlink_s(self) -> float:
         return self.down_s
+
+    # ------------------------------------------------------- migration
+    def kv_compatible(self, other: "EngineHandle") -> bool:
+        """Whether a KV snapshot exported here can be imported by
+        ``other``: both paged, same vocabulary, same KV geometry
+        (layers, kv heads, head dim) and page size.  Structural check
+        only — bit-identical resumed tokens additionally require the two
+        engines to share weights (``build_continuum(param_seed=...)``)."""
+        e, o = self.engine, other.engine
+        return (e.paged and o.paged
+                and self.cfg.vocab == other.cfg.vocab
+                and e.model.kv_geometry == o.model.kv_geometry
+                and e.page_size == o.page_size)
 
     # ------------------------------------------------------- split point
     def split_point(self, spec: cm.MediaSpec,
@@ -210,6 +232,8 @@ class EngineHandle(ServerHandle):
                               self.vtime + dt, pid=self._pid,
                               args={"prefill_tokens": dp, "busy": n_busy})
             self.vtime += dt
+            if self.on_step is not None:
+                self.on_step(self)
 
     # ------------------------------------------------------------- probes
     def _load(self) -> dict:
@@ -288,6 +312,12 @@ class Cluster:
         self.t = 0.0
         self.records: dict[int, dict] = {}
         self._uid = 0
+        # uid -> destination handle index of a planned disaggregated
+        # dispatch (prefill where submitted, decode there); executed by
+        # _on_engine_step as soon as the request reaches decode phase
+        self._planned: dict[int, int] = {}
+        for h in handles:
+            h.on_step = self._on_engine_step
         # default to the handles' shared telemetry so callers building via
         # build_continuum(telemetry=...) need not pass it twice
         if telemetry is None:
@@ -299,7 +329,8 @@ class Cluster:
 
     def submit(self, server: int, task: int, tokens, max_new_tokens: int,
                t_arrival: float, quality_ok: bool = True, segments=None,
-               media_delay_s: float = 0.0) -> int:
+               media_delay_s: float = 0.0,
+               decode_server: int | None = None) -> int:
         """Dispatch one task to ``server`` at virtual ``t_arrival``; the
         request reaches the engine after the uplink delay.  ``quality_ok``
         is the success-predictor verdict for (task, server) — generated
@@ -312,8 +343,20 @@ class Cluster:
         edge-side encode + media serialization from
         ``EngineHandle.split_point`` — before the request reaches the
         engine, so measured TTFT/e2e include where the media crossed the
-        continuum."""
+        continuum.
+
+        ``decode_server`` (None = run both phases on ``server``) plans the
+        disaggregated dispatch shape: prefill on ``server``, then — as
+        soon as the request reaches decode phase — its KV snapshot
+        migrates over the device link (charged on the virtual clock,
+        ``kv_migrate`` span) and decode resumes on ``decode_server``."""
         h = self.handles[server]
+        if decode_server is not None and decode_server != server:
+            if not h.kv_compatible(self.handles[decode_server]):
+                raise ValueError(
+                    f"cannot plan prefill on {h.name} / decode on "
+                    f"{self.handles[decode_server].name}: KV-incompatible "
+                    "engines (geometry, page size, or cache backend)")
         self._uid += 1
         if segments is not None:
             req = Request(self._uid, segments=segments,
@@ -333,27 +376,170 @@ class Cluster:
         self.records[self._uid] = {"uid": self._uid, "task": task,
                                    "server": server, "t_arrival": t_arrival,
                                    "req": req, "quality_ok": bool(quality_ok)}
+        if decode_server is not None and decode_server != server:
+            self._planned[self._uid] = int(decode_server)
         return self._uid
+
+    # lockstep quantum: a migration fired while advancing one handle
+    # enqueues work onto a *peer* whose clock may already sit at the
+    # current barrier, so the admission lands late by at most one
+    # quantum.  Idle handles fast-forward, so finer sync is cheap.
+    SYNC_STEP_S = 0.1
 
     def busy(self) -> bool:
         return any(h.busy() or h.pending for h in self.handles)
 
-    def advance_to(self, t: float):
+    def advance_to(self, t: float, step_s: float | None = None):
         if t <= self.t:
             return
-        for h in self.handles:
-            h.advance_to(t)
-        self.t = t
+        step = step_s if step_s is not None else self.SYNC_STEP_S
+        while self.t < t - 1e-9:
+            tt = min(self.t + step, t)
+            for h in self.handles:
+                h.advance_to(tt)
+            self.t = tt
 
-    def drain(self, max_virtual_s: float | None = None):
+    # ------------------------------------------------------- migration
+    def _on_engine_step(self, h: EngineHandle):
+        """Per-tick hook (EngineHandle.on_step): execute planned
+        prefill-here/decode-there handoffs whose request just reached
+        decode phase on ``h``.  A request may decode a token or two here
+        before the hook sees it — the snapshot resumes at exactly
+        ``output[-1]`` either way, so no work is lost or repeated."""
+        if not self._planned:
+            return
+        for uid in list(self._planned):
+            rec = self.records.get(uid)
+            if rec is None or self.handles[rec["server"]] is not h:
+                continue
+            req = rec["req"]
+            if req.done:
+                del self._planned[uid]  # finished before the handoff fired
+                continue
+            if req.output and h.engine.slot_of_request(uid) is not None:
+                dst = self._planned.pop(uid)
+                self.migrate(uid, dst)
+
+    def migrate(self, uid: int, dst: int) -> dict:
+        """Evacuate request ``uid`` from the engine currently holding it
+        and resume it on handle ``dst``, charging the KV transfer on the
+        virtual clock: wire bytes are the non-cached snapshot pages at the
+        **destination's** page precision (int8 tiers pay ~half), link time
+        is the cost model's server-to-server roofline, and the transfer is
+        visible as a ``kv_migrate`` span.  Returns the move record."""
+        rec = self.records[uid]
+        src = rec["server"]
+        src_h, dst_h = self.handles[src], self.handles[dst]
+        if not src_h.kv_compatible(dst_h):
+            raise ValueError(
+                f"cannot migrate request {uid}: {src_h.name} and "
+                f"{dst_h.name} are KV-incompatible")
+        req, snap = src_h.engine.evacuate(uid)
+        n_cached = (len(dst_h.engine.pool.peek_hashes(snap.prefix_hashes))
+                    if dst_h.engine.prefix_caching else 0)
+        n_wire = max(snap.num_pages - n_cached, 0)
+        nbytes = n_wire * dst_h.engine.page_bytes()
+        mig_s = float(cm.migrate_link_s(nbytes, src_h.device, dst_h.device))
+        t0 = src_h.vtime
+        dst_h.enqueue(req, t0 + mig_s)
+        rec["server"] = dst
+        src_h._c_mig_out.inc(nbytes)
+        dst_h._c_mig_in.inc(nbytes)
+        if self._tr is not None:
+            self._tr.span("kv_migrate", "transfer", t0, t0 + mig_s,
+                          pid=dst_h._pid, tid=uid,
+                          args={"bytes": int(nbytes), "pages": int(n_wire),
+                                "tokens": int(snap.num_tokens),
+                                "src": src_h.name, "dst": dst_h.name})
+        return {"uid": uid, "src": src, "dst": dst, "bytes": int(nbytes),
+                "pages": int(n_wire), "migrate_s": mig_s, "t": t0}
+
+    def rebalance(self, threshold_s: float, *,
+                  min_gain_s: float = 0.0) -> "list[dict]":
+        """Mid-stream evacuation policy: for every engine whose backlog
+        exceeds ``threshold_s``, consider moving its decoding request with
+        the most generation budget left to the KV-compatible handle where
+        (migration + remaining decode + queueing) beats staying local by
+        more than ``min_gain_s``.  Returns the executed move records."""
+        loads = [h._load()["backlog_s"] for h in self.handles]
+        moves = []
+        for i, src_h in enumerate(self.handles):
+            if src_h.fail or loads[i] <= threshold_s:
+                continue
+            e = src_h.engine
+            cands = [(int(e.budget[s]), s, r.uid)
+                     for s, r in enumerate(e.slots)
+                     if r is not None and r.output and int(e.budget[s]) > 0]
+            if not cands:
+                continue
+            remaining, slot, uid = max(cands)
+            n_ctx = int(e.pos[slot])
+            best = None
+            for j, dst_h in enumerate(self.handles):
+                if j == i or dst_h.fail or not src_h.kv_compatible(dst_h):
+                    continue
+                pages = ceil_blocks(n_ctx, dst_h.engine.page_size)
+                mig = float(cm.migrate_link_s(
+                    pages * dst_h.engine.page_bytes(),
+                    src_h.device, dst_h.device))
+                t_move = (mig + remaining * dst_h.decode_tick_s
+                          + 0.5 * loads[j])
+                if best is None or t_move < best[0]:
+                    best = (t_move, j)
+            if best is None:
+                continue
+            t_stay = remaining * src_h.decode_tick_s + 0.5 * loads[i]
+            if t_stay - best[0] > min_gain_s:
+                self._planned.pop(uid, None)  # superseded by this move
+                moves.append(self.migrate(uid, best[1]))
+                loads[i] = src_h._load()["backlog_s"]
+        return moves
+
+    def predict_disagg_e2e_s(self, prefill: int, decode: int,
+                             prompt_tokens: int, max_new_tokens: int, *,
+                             media_delay_s: float = 0.0
+                             ) -> "tuple[float, dict]":
+        """Predicted e2e of the disaggregated dispatch shape — prefill on
+        handle ``prefill``, KV migration, decode on handle ``decode`` —
+        decomposed per term; the third shape ``QLMIORouter.plan`` prices
+        against pure-edge and pure-cloud.  Mirrors
+        ``EngineHandle.predict_e2e_s`` (same tick-cost scale)."""
+        hp, hd = self.handles[prefill], self.handles[decode]
+        ep, ed = hp.engine, hd.engine
+        n_pref = float(cm.chunked_prefill_tokens(
+            prompt_tokens, ep.prefill_chunk if ep.chunked else 0,
+            minimum=ep.min_bucket if ep.bucketing else 1))
+        pages = ceil_blocks(prompt_tokens + 1, ed.page_size)
+        mig = float(cm.migrate_link_s(pages * ed.page_bytes(),
+                                      hp.device, hd.device))
+        terms = {"queue": hp._load()["backlog_s"],
+                 "prefill": n_pref * hp.prefill_tok_s,
+                 "migrate": mig,
+                 "queue_decode": hd._load()["backlog_s"],
+                 "decode": max_new_tokens * hd.decode_tick_s,
+                 "media": float(media_delay_s),
+                 "link": hp.up_s + hd.down_s}
+        return sum(terms.values()), terms
+
+    def drain(self, max_virtual_s: float | None = None,
+              step_s: float | None = None):
         """Advance every engine until idle (or the deadline, for failed /
         wedged servers).  Idle engines fast-forward, so this is cheap.
         Work still queued at the deadline — a failed server's requests, or
         backlog beyond the timeout horizon — can never complete inside it,
         so it is dropped here: ``collect()`` reports those requests as
-        timeouts and the cluster stays reusable (``reset()``-able)."""
+        timeouts and the cluster stays reusable (``reset()``-able).
+
+        Draining steps the fleet in ``step_s`` increments (default
+        ``SYNC_STEP_S``) rather than one full-horizon pass per handle: a
+        migration fired mid-drain enqueues work onto a *peer* handle at
+        the source's current vtime, and a handle already advanced to the
+        deadline would clear that work as a timeout without serving it."""
         deadline = self.t + (2 * self.timeout_s if max_virtual_s is None
                              else max_virtual_s)
+        step = step_s if step_s is not None else self.SYNC_STEP_S
+        while self.t < deadline - 1e-9 and self.busy():
+            self.advance_to(min(self.t + step, deadline), step_s=step)
         for h in self.handles:
             h.advance_to(deadline)
             h.pending.clear()
@@ -414,6 +600,7 @@ class Cluster:
             self.telemetry.reset()
         self.t = 0.0
         self.records = {}
+        self._planned = {}
         self._uid = 0  # uids restart so replays compare bit-identically
 
     def latency_stats(self) -> dict:
@@ -533,7 +720,8 @@ class EngineBackend:
 
 
 def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
-                    fail=(), telemetry=None,
+                    fail=(), telemetry=None, arch: str | None = None,
+                    param_seed: int | None = None,
                     **engine_kw) -> "list[EngineHandle]":
     """Live handles for a ``[(class_idx, count), ...]`` spec (the
     ``SYSTEM_CONFIGS`` layout) — pair with
@@ -541,18 +729,26 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
     fleet index the same servers.  Class 0/1 are edge tiers on the small
     config; the last class is the cloud tier on the larger config.
     ``telemetry`` (shared across the fleet) turns on lifecycle tracing +
-    the dispatch audit; ``Cluster`` picks it up from the handles."""
+    the dispatch audit; ``Cluster`` picks it up from the handles.
+
+    ``arch`` forces every handle onto one live config and ``param_seed``
+    onto one shared weight init — together they make the whole fleet
+    KV-compatible with identical weights, the precondition for
+    bit-identical cross-engine migration (disaggregated prefill/decode;
+    the per-class archs and per-handle seeds stay the default because
+    heterogeneous fleets exercise more of the replay harness)."""
     handles = []
     i = 0
     for class_idx, count in spec:
         dev_name, prof_name = SERVER_CLASSES[class_idx]
         for _ in range(count):
             cloud = class_idx == len(SERVER_CLASSES) - 1
-            arch = CLASS_ARCHS[class_idx]
+            arch_i = arch if arch is not None else CLASS_ARCHS[class_idx]
+            seed_i = param_seed if param_seed is not None else seed + i
             handles.append(EngineHandle(
-                f"{'cloud' if cloud else 'edge'}-{i} ({dev_name}/{arch})",
-                arch, cm.DEVICES[dev_name], cm.MODELS[prof_name],
-                is_cloud=cloud, seed=seed + i, fail=i in fail,
+                f"{'cloud' if cloud else 'edge'}-{i} ({dev_name}/{arch_i})",
+                arch_i, cm.DEVICES[dev_name], cm.MODELS[prof_name],
+                is_cloud=cloud, seed=seed_i, fail=i in fail,
                 time_scale=time_scale, telemetry=telemetry, **engine_kw))
             i += 1
     return handles

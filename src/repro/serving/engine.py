@@ -49,6 +49,16 @@ mask to the prefill entry points, which embed-and-inject once at the
 boundary (``lm.embed_inputs``).  Two requests carrying the same image hit
 each other's prefix-cache blocks exactly like identical text would.
 
+Disaggregated prefill/decode (paged path): a decoding request can be
+checkpointed as a portable ``KVSnapshot`` (``export_kv``) or evacuated
+between ticks (``evacuate``), and a snapshot-carrying request submitted
+to another engine is admitted *straight into decode phase* — its pages
+adopted into the local pool (converted to the local ``kv_dtype``), its
+prompt blocks re-registered in the prefix trie, no prefill pass — and
+resumes at exactly ``output[-1]``.  The continuum harness
+(repro/serving/cluster.py) charges the transfer on the device link under
+its virtual clock.
+
 Works for every arch family — per-leaf cache batch dims are keyed by the
 cache layout names in repro/models/api.py.
 
@@ -76,8 +86,9 @@ import numpy as np
 from repro.kernels.quant import dequantize_kv, quantize_kv
 from repro.models.api import Model
 from repro.serving import segments as sg
-from repro.serving.kv_cache import (BlockPool, BlockTable, OutOfPagesError,
-                                    kv_page_bytes)
+from repro.serving.kv_cache import (BlockPool, BlockTable, KVSnapshot,
+                                    OutOfPagesError, ceil_blocks,
+                                    full_blocks, kv_page_bytes)
 from repro.serving.telemetry import MetricsRegistry, latency_summary
 
 
@@ -127,6 +138,11 @@ class Request:
     features: np.ndarray | None = dataclasses.field(default=None,
                                                     repr=False)
     embed_mask: np.ndarray | None = dataclasses.field(default=None,
+                                                      repr=False)
+    # checkpointed KV state from another engine (kv_cache.KVSnapshot): the
+    # request is admitted straight into decode phase from these pages —
+    # no prefill pass — resuming at exactly ``output[-1]``
+    imported: "KVSnapshot | None" = dataclasses.field(default=None,
                                                       repr=False)
 
     def __post_init__(self):
@@ -256,6 +272,13 @@ class ServingEngine:
         self._c_submitted = m.counter("requests_submitted")
         self._c_finished = m.counter("requests_finished")
         self._c_decode_tokens = m.counter("decode_tokens")
+        # KV snapshot traffic (disaggregated prefill/decode): pages and
+        # bytes exported to / imported from other engines, at this
+        # engine's own page precision
+        self._c_kv_exported_pages = m.counter("kv_exported_pages")
+        self._c_kv_imported_pages = m.counter("kv_imported_pages")
+        self._c_kv_export_bytes = m.counter("kv_export_bytes")
+        self._c_kv_import_bytes = m.counter("kv_import_bytes")
         # new XLA traces since the last metrics.reset() — the steady-state
         # recompile guard asserts this stays 0 on a warmed engine
         self._c_trace_events = m.counter("xla_trace_events")
@@ -277,7 +300,7 @@ class ServingEngine:
             telemetry.register_metrics(trace_name, m)
         if self.paged:
             self.page_size = page_size
-            self.max_blocks = -(-max_seq // page_size)
+            self.max_blocks = ceil_blocks(max_seq, page_size)
             if num_pages is None:
                 if kv_budget_bytes is not None:
                     # device KV byte budget -> page count at this
@@ -447,7 +470,7 @@ class ServingEngine:
     def _total_blocks(self, req: Request) -> int:
         """Worst-case pages this request can ever hold (prompt + decode)."""
         horizon = min(len(req.tokens) + req.max_new_tokens, self.max_seq)
-        return -(-horizon // self.page_size)
+        return ceil_blocks(horizon, self.page_size)
 
     def _growth_outstanding(self) -> int:
         """Pages occupied slots may still allocate: decode growth of active
@@ -497,7 +520,7 @@ class ServingEngine:
         hit_pages = self.pool.peek_prefix(toks) if self.prefix_caching \
             else []
         est = self._clip_reuse(min(len(hit_pages) * bs, T - 1))
-        used = hit_pages[:-(-est // bs)] if est else []
+        used = hit_pages[:ceil_blocks(est, bs)] if est else []
         need = self._total_blocks(req) - len(used)
         need += sum(1 for p in used if self.pool.ref[p] == 0)
         if est and est % bs:
@@ -511,7 +534,7 @@ class ServingEngine:
             # a fully-cached prompt still needs its last token recomputed
             # for the next-token logits -> copy-on-write on the final page
             n_reuse = self._clip_reuse(min(n_hit, T - 1))
-            keep = -(-n_reuse // bs)
+            keep = ceil_blocks(n_reuse, bs)
             for p in table.pages[keep:]:  # rounded-off / unused hit pages
                 self.pool.release(p)
             table.pages = table.pages[:keep]
@@ -591,7 +614,8 @@ class ServingEngine:
             logits, (sk, sv) = self._prefill_sfx(self.params, batch, pk, pv)
         self._scatter_kv(table, np.arange(n_reuse, T), sk, sv, n_sfx)
         if self.prefix_caching:
-            self.pool.register_prefix(toks, table.pages[:T // self.page_size])
+            self.pool.register_prefix(
+                toks, table.pages[:full_blocks(T, self.page_size)])
         self._c_prefill_computed.inc(n_sfx)
         self._c_prefill_padded.inc(Sb - n_sfx)
         self._c_prefix_reused.inc(n_reuse)
@@ -607,10 +631,131 @@ class ServingEngine:
             self.tables[slot] = -1
             self.pos[slot] = 0
 
+    # ------------------- KV snapshot export / import (disaggregation)
+    def slot_of_request(self, uid: int) -> "int | None":
+        """Decode slot currently holding request ``uid``, or None.  A
+        request mid-chunked-prefill is *not* found (``slots[slot]`` stays
+        None until promotion), so a hit means the request is exportable."""
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                return i
+        return None
+
+    def export_kv(self, uid: int) -> KVSnapshot:
+        """Checkpoint a decoding request's KV state as a portable
+        ``KVSnapshot`` (host-side copy; the request keeps running here).
+
+        The snapshot covers every cache position written so far — the
+        prompt plus the generated tokens already fed back through the
+        model, i.e. positions ``[0, pos)`` — and records the prompt's
+        prefix-trie chain hashes so the importer can re-register (or
+        dedupe against) the receiving pool's trie.  Page refcounts are
+        held across the device->host copy, so a concurrent eviction on
+        this engine cannot recycle a page mid-export."""
+        if not self.paged:
+            raise ValueError("export_kv needs the paged cache backend")
+        slot = self.slot_of_request(uid)
+        if slot is None:
+            raise ValueError(
+                f"request {uid} is not in decode phase on this engine "
+                "(queued, mid-prefill, or finished)")
+        req = self.slots[slot]
+        bs = self.page_size
+        n_ctx = int(self.pos[slot])
+        pages = list(self.block_tables[slot].pages[:ceil_blocks(n_ctx, bs)])
+        for p in pages:
+            self.pool.retain(p)
+        try:
+            leaves = self.model.export_paged_kv(self.cache, pages)
+        finally:
+            for p in pages:
+                self.pool.release(p)
+        toks = np.asarray(req.tokens, np.int64)
+        n_out = n_ctx - len(toks)
+        tokens = np.concatenate(
+            [toks, np.asarray(req.output[:n_out], np.int64)])
+        snap = KVSnapshot(tokens=tokens, n_prompt=len(toks), block_size=bs,
+                          kv_dtype=self.kv_dtype,
+                          geometry=self.model.kv_geometry, leaves=leaves,
+                          prefix_hashes=BlockPool.chain_hashes(toks, bs),
+                          src_pages=pages)
+        self._c_kv_exported_pages.inc(len(pages))
+        self._c_kv_export_bytes.inc(len(pages) * self.page_bytes())
+        return snap
+
+    def evacuate(self, uid: int) -> "tuple[Request, KVSnapshot]":
+        """Checkpoint a decoding request and remove it from this engine,
+        freeing its slot and pages.  The returned ``Request`` carries the
+        snapshot in ``req.imported`` and can be submitted to another
+        (KV-compatible) engine, which resumes decode at exactly
+        ``output[-1]`` — no tokens are lost or recomputed.  The request
+        is *not* added to ``finished``; the caller owns it."""
+        snap = self.export_kv(uid)
+        slot = self.slot_of_request(uid)
+        req = self.slots[slot]
+        req.imported = snap
+        self._free_slot(slot)
+        return req, snap
+
+    def _admit_imported(self, slot: int, req: Request) -> bool:
+        """Admit a snapshot-carrying request straight into decode phase:
+        adopt its pages into this pool (prefix-trie hits satisfied from
+        local cache, the rest imported and converted to this engine's
+        ``kv_dtype``) and install the slot at the snapshot's position —
+        no prefill pass.  False => pool cannot cover it yet (caller
+        requeues).
+
+        CoW safety: decode writes land at logical block
+        ``pos // page_size`` with ``pos >= num_tokens >= n_prompt``, i.e.
+        strictly past every block this method registers in the trie — so
+        adopted/registered pages are never written and need no
+        copy-on-write here."""
+        snap = req.imported
+        n_ctx = snap.num_tokens
+        nb = snap.num_pages
+        hits = (self.pool.peek_hashes(snap.prefix_hashes)
+                if self.prefix_caching else [])
+        need = self._total_blocks(req) - len(hits)
+        need += sum(1 for p in hits if self.pool.ref[p] == 0)
+        if self.pool.num_free() - self._growth_outstanding() < need:
+            return False
+        table = BlockTable(self.pool)
+        if self.prefix_caching:
+            table.pages = self.pool.lookup_hashes(snap.prefix_hashes)
+        n_hit = len(table.pages)
+        try:
+            table.ensure_capacity(n_ctx)
+        except OutOfPagesError:  # admission control should prevent this
+            table.free()
+            return False
+        if n_hit < nb:
+            self.cache = self.model.import_paged_kv(
+                self.cache, table.pages[n_hit:nb], snap.leaves,
+                snap.kv_dtype, from_block=n_hit)
+        if self.prefix_caching:
+            self.pool.register_blocks(
+                snap.prefix_hashes, table.pages[:len(snap.prefix_hashes)])
+        self.block_tables[slot] = table
+        self.tables[slot] = table.as_row(self.max_blocks)
+        self.slots[slot] = req
+        self.pos[slot] = n_ctx
+        self.budget[slot] = req.max_new_tokens - len(req.output)
+        req.t_admit = self._now()
+        self._c_kv_imported_pages.inc(nb - n_hit)
+        self._c_kv_import_bytes.inc((nb - n_hit) * self.page_bytes())
+        self._c_prefix_reused.inc(n_hit * self.page_size)
+        self._progress = True
+        return True
+
     # -------------------------------------------------- chunked prefill
     def _start_prefill(self, slot: int, req: Request) -> bool:
         """Begin a chunked prefill in ``slot``; False => requeued (paged
         pool cannot cover the request yet)."""
+        if req.imported is not None:
+            if not self._admit_imported(slot, req):
+                self.queue.appendleft(req)
+                return False
+            return True
         if self.paged:
             reserved = self._reserve_table(req)
             if reserved is None:
@@ -667,7 +812,8 @@ class ServingEngine:
             # request admitted later this tick already hits them
             self.pool.register_prefix(
                 toks[:task.done],
-                self.block_tables[slot].pages[:task.done // self.page_size])
+                self.block_tables[slot].pages[
+                    :full_blocks(task.done, self.page_size)])
         if task.done >= T:  # prompt complete: promote to decoding
             self.prefill_tasks[slot] = None
             self._activate(slot, req, int(jnp.argmax(task.logits[0])))
@@ -740,7 +886,34 @@ class ServingEngine:
                 "prompt")
         if len(req.tokens) < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
-        req.t_submit = self._now()
+        if req.imported is not None:
+            snap = req.imported
+            if not self.paged:
+                raise ValueError(
+                    f"request {req.uid}: KV snapshot import needs the "
+                    "paged cache backend")
+            if snap.geometry != self.model.kv_geometry:
+                raise ValueError(
+                    f"request {req.uid}: snapshot KV geometry "
+                    f"{snap.geometry} does not match this engine's "
+                    f"{self.model.kv_geometry}")
+            if snap.block_size != self.page_size:
+                raise ValueError(
+                    f"request {req.uid}: snapshot block_size "
+                    f"{snap.block_size} != engine page_size "
+                    f"{self.page_size}")
+            if snap.num_tokens > self.max_seq - 1:
+                raise ValueError(
+                    f"request {req.uid}: snapshot of {snap.num_tokens} "
+                    f"tokens exceeds max_seq={self.max_seq} - 1")
+            if not req.output or req.done:
+                raise ValueError(
+                    f"request {req.uid}: a snapshot-carrying request must "
+                    "be mid-decode (non-empty output, not done)")
+        # a migrated request keeps its original submit stamp so queue-time
+        # and e2e span the source engine too (shared virtual-clock base)
+        if not req.token_times:
+            req.t_submit = self._now()
         self._c_submitted.inc()
         if self._tr is not None:
             self._tr.instant("submit", "lifecycle", req.t_submit,
@@ -755,8 +928,13 @@ class ServingEngine:
         self.finished.append(req)
         self._c_finished.inc()
         tt = req.token_times
+        imported = req.imported is not None
         ta = req.t_admit if req.t_admit >= req.t_submit else req.t_submit
-        self._h_queue.observe(ta - req.t_submit)
+        if not imported:
+            # a migrated request's queue/prefill phases ran on the source
+            # engine (its t_admit here postdates tt[0]); only the decode
+            # span and the end-to-end latencies are meaningful locally
+            self._h_queue.observe(ta - req.t_submit)
         self._h_ttft.observe(tt[0] - req.t_submit)
         self._h_e2e.observe(tt[-1] - req.t_submit)
         if len(tt) > 1:
@@ -764,9 +942,11 @@ class ServingEngine:
         tr = self._tr
         if tr is not None:
             pid, tid = self._pid, req.uid
-            tr.span("queue", "lifecycle", req.t_submit, ta, pid=pid, tid=tid)
-            tr.span("prefill", "lifecycle", ta, tt[0], pid=pid, tid=tid,
-                    args={"prompt_tokens": len(req.tokens)})
+            if not imported:
+                tr.span("queue", "lifecycle", req.t_submit, ta,
+                        pid=pid, tid=tid)
+                tr.span("prefill", "lifecycle", ta, tt[0], pid=pid, tid=tid,
+                        args={"prompt_tokens": len(req.tokens)})
             tr.span("decode", "lifecycle", tt[0], tt[-1], pid=pid, tid=tid,
                     args={"new_tokens": len(req.output)})
 
@@ -796,6 +976,11 @@ class ServingEngine:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            if req.imported is not None:
+                if self._admit_imported(slot, req):
+                    continue
+                self.queue.appendleft(req)
+                break  # out of pages: wait for running requests to finish
             admit = self._admit_paged if self.paged else self._admit_dense
             first = admit(slot, req)
             if first is None:

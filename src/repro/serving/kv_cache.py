@@ -25,6 +25,13 @@ invariants are testable without touching jax:
     with the trie or another request (e.g. recomputing the final prompt
     token of a fully-cached prompt).  ``ensure_writable`` hands back a
     private replacement page and tells the caller to copy the contents.
+  * KV snapshots    — ``KVSnapshot`` is the portable, self-describing form
+    of a request's KV state (host-resident page contents + int8 scale
+    rows + prefix-trie chain hashes + geometry): the engine exports one to
+    checkpoint/evacuate a live request, and a *foreign* engine adopts it
+    straight into decode phase (``BlockPool.lookup_hashes`` +
+    ``register_blocks`` re-register the prompt blocks in the receiving
+    trie, so repeated prompts hit the destination's cache afterwards).
 
 Device-side layout (owned by the engine): ``k_pages``/``v_pages`` are
 ``[L, num_pages, block_size, Hkv, Dh]`` and a per-slot block table maps
@@ -50,6 +57,22 @@ NULL_PAGE = 0
 # position, per kv head) fp32 scale the int8 layout adds
 KV_DTYPE_BYTES = {"bf16": 2, "int8": 1}
 SCALE_ITEMSIZE = 4
+
+
+def ceil_blocks(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions (last may be partial).
+
+    The one source of truth for block-capacity math — the engine's batch
+    assembly (``max_blocks``, admission horizons) and the snapshot
+    import path both use it, so their row/padding arithmetic can never
+    drift apart."""
+    return -(-int(n_tokens) // int(block_size))
+
+
+def full_blocks(n_tokens: int, block_size: int) -> int:
+    """Blocks *fully covered* by ``n_tokens`` positions — the only blocks
+    the prefix trie may register (partial blocks are still writable)."""
+    return int(n_tokens) // int(block_size)
 
 
 def kv_token_bytes(n_layers: int, n_kv_heads: int, head_dim: int,
@@ -163,6 +186,20 @@ class BlockPool:
     def chain_hash(parent: int | None, block_tokens) -> int:
         return hash((parent, bytes(np.asarray(block_tokens, np.int64).data)))
 
+    @classmethod
+    def chain_hashes(cls, tokens, block_size: int) -> list[int]:
+        """Chain hash of every *full* block of ``tokens`` — the trie keys a
+        registered prompt lives under.  A ``KVSnapshot`` carries these, so
+        a foreign pool can look up / re-register the snapshot's prompt
+        blocks without recomputing token bytes."""
+        tokens = np.asarray(tokens)
+        h: int | None = None
+        out: list[int] = []
+        for j in range(full_blocks(len(tokens), block_size)):
+            h = cls.chain_hash(h, tokens[j * block_size:(j + 1) * block_size])
+            out.append(h)
+        return out
+
     def peek_prefix(self, tokens) -> list[int]:
         """Pages of the cached prefix, without side effects.
 
@@ -170,12 +207,14 @@ class BlockPool:
         hit/miss stats — use it for admission-control checks that may be
         retried many times before the real lookup.
         """
-        tokens = np.asarray(tokens)
-        bs = self.block_size
-        h: int | None = None
+        return self.peek_hashes(self.chain_hashes(tokens, self.block_size))
+
+    def peek_hashes(self, hashes: "list[int]") -> list[int]:
+        """Pages resident under a leading run of precomputed chain hashes,
+        without side effects — ``peek_prefix`` for callers that already
+        hold the hashes (snapshot import admission)."""
         pages: list[int] = []
-        for j in range(len(tokens) // bs):
-            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+        for h in hashes:
             page = self.hash_page.get(h)
             if page is None:
                 break
@@ -188,12 +227,16 @@ class BlockPool:
         Returns ``(pages, n_tokens)``; every returned page has been
         ``retain``-ed for the caller (caller owns one reference each).
         """
-        tokens = np.asarray(tokens)
-        bs = self.block_size
+        pages = self.lookup_hashes(self.chain_hashes(tokens,
+                                                     self.block_size))
+        return pages, len(pages) * self.block_size
+
+    def lookup_hashes(self, hashes: "list[int]") -> list[int]:
+        """``lookup_prefix`` over precomputed chain hashes: the leading
+        resident run is ``retain``-ed for the caller (one reference each)
+        and hit/miss stats are recorded."""
         pages: list[int] = []
-        h: int | None = None
-        for j in range(len(tokens) // bs):
-            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+        for h in hashes:
             page = self.hash_page.get(h)
             if page is None:
                 self.misses += 1
@@ -201,7 +244,7 @@ class BlockPool:
             self.hits += 1
             self.retain(page)
             pages.append(page)
-        return pages, len(pages) * bs
+        return pages
 
     def register_prefix(self, tokens, pages: list[int]):
         """Publish the full prompt blocks of a request into the trie.
@@ -212,11 +255,15 @@ class BlockPool:
         registered (prefix hits) are no-ops; a hash collision with a
         different live page keeps the first registration.
         """
-        tokens = np.asarray(tokens)
-        bs = self.block_size
-        h: int | None = None
-        for j, page in enumerate(pages):
-            h = self.chain_hash(h, tokens[j * bs:(j + 1) * bs])
+        hashes = self.chain_hashes(tokens, self.block_size)
+        self.register_blocks(hashes[:len(pages)], pages)
+
+    def register_blocks(self, hashes: "list[int]", pages: list[int]):
+        """``register_prefix`` over precomputed chain hashes — the adoption
+        path of an imported ``KVSnapshot`` re-registers its prompt blocks
+        under the hashes the snapshot carries, so the receiving engine's
+        trie serves repeated prompts from the migrated pages."""
+        for h, page in zip(hashes, pages):
             if h in self.hash_page:
                 continue  # already published (e.g. this request's own hit)
             if page in self.page_hash:
@@ -255,8 +302,7 @@ class BlockTable:
 
     def ensure_capacity(self, n_tokens: int):
         """Allocate fresh pages until ``n_tokens`` positions are addressable."""
-        bs = self.pool.block_size
-        while len(self.pages) * bs < n_tokens:
+        while len(self.pages) < ceil_blocks(n_tokens, self.pool.block_size):
             self.pages.append(self.pool.alloc())
 
     def page_of(self, position: int) -> int:
@@ -282,3 +328,71 @@ class BlockTable:
         for page in self.pages:
             self.pool.release(page)
         self.pages = []
+
+
+@dataclasses.dataclass
+class KVSnapshot:
+    """Portable, self-describing KV state of one (partially decoded)
+    request — the unit of cross-engine migration.
+
+    The engine exports a snapshot by gathering the request's contiguous
+    logical block range to host numpy (refcounts held during the gather;
+    the snapshot is a *copy*, so source-side eviction or page recycling
+    can never corrupt it), and a foreign engine adopts it straight into
+    decode phase: resident prompt blocks are reused from the receiving
+    trie, missing blocks are scattered into freshly allocated pages
+    (precision-converted if the pools disagree), and the prompt blocks are
+    re-registered under the carried chain hashes.
+
+    ``leaves`` holds the page contents in the source pool's storage form,
+    keyed like the device cache (``k_pages``/``v_pages`` ``[L, NB, bs,
+    Hkv, Dh]``, plus ``k_scales``/``v_scales`` ``[L, NB, bs, Hkv]`` for
+    int8) with the page axis in *logical block order* — block ``j`` of
+    ``tokens`` lives at index ``j``, so the implied block-table row is
+    ``arange(NB)`` and the importer never needs the source's page ids
+    (``src_pages`` rides along for provenance only).
+    """
+
+    tokens: np.ndarray  # [n_ctx] int64 key ids of every written position
+    n_prompt: int  # leading prompt key ids among ``tokens``
+    block_size: int
+    kv_dtype: str  # storage form of ``leaves`` ("bf16" | "int8")
+    geometry: "tuple[int, int, int]"  # (n_layers, n_kv_heads, head_dim)
+    leaves: "dict[str, np.ndarray]"
+    prefix_hashes: "list[int]"  # chain hash per full *prompt* block
+    src_pages: "list[int]" = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int64)
+        L, hkv, dh = self.geometry
+        want = (L, self.num_pages, self.block_size, hkv, dh)
+        got = tuple(self.leaves["k_pages"].shape)
+        if got != want:
+            raise ValueError(f"KVSnapshot: k_pages shape {got} does not "
+                             f"match geometry/context {want}")
+        if len(self.prefix_hashes) != full_blocks(self.n_prompt,
+                                                  self.block_size):
+            raise ValueError(
+                f"KVSnapshot: {len(self.prefix_hashes)} prefix hashes for "
+                f"{full_blocks(self.n_prompt, self.block_size)} full prompt "
+                "blocks")
+
+    @property
+    def num_tokens(self) -> int:
+        """Context positions the snapshot covers (prompt + generated)."""
+        return len(self.tokens)
+
+    @property
+    def num_pages(self) -> int:
+        return ceil_blocks(len(self.tokens), self.block_size)
+
+    def page_bytes(self) -> int:
+        """Bytes per page in the snapshot's *own* storage form.  Migration
+        pricing instead uses the destination engine's ``page_bytes()`` —
+        the importer converts precision on adoption, so only
+        destination-form bytes need to cross a link."""
+        L, hkv, dh = self.geometry
+        return kv_page_bytes(L, hkv, dh, self.block_size, self.kv_dtype)
+
+    def nbytes(self) -> int:
+        return self.num_pages * self.page_bytes()

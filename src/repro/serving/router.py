@@ -118,7 +118,7 @@ class QLMIORouter:
     def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
                  *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
                  policy=None, prefix_hit_pred=None, prefill_pred=None,
-                 media_pred=None, telemetry=None):
+                 media_pred=None, migrate_pred=None, telemetry=None):
         """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
         P(success).  ``policy`` optionally overrides the scoring rule with a
         trained QLMIO agent's argmax.
@@ -141,6 +141,14 @@ class QLMIORouter:
         behind thin links are charged for the bytes the task's media
         actually puts on them.
 
+        ``migrate_pred(task, prefill_server, decode_server) -> seconds``
+        optionally prices the *disaggregated* dispatch shape — prefill on
+        one server, KV migration over the link, decode on another
+        (serving/cluster.Cluster.predict_disagg_e2e_s gives the live
+        version) — returning the pair's total predicted latency, or None
+        for a KV-incompatible pair.  With it, ``plan`` scores every
+        (prefill, decode) pair alongside the pure single-server shapes.
+
         ``telemetry`` (repro/serving/telemetry.Telemetry) optionally
         audits every ``dispatch``: the chosen server, its predicted
         latency, every candidate's effective latency, and — this path
@@ -156,6 +164,7 @@ class QLMIORouter:
         self.prefix_hit_pred = prefix_hit_pred
         self.prefill_pred = prefill_pred
         self.media_pred = media_pred
+        self.migrate_pred = migrate_pred
         self.telemetry = telemetry
         self.health = HealthTracker(len(servers))
         self.queue_s = np.zeros(len(servers))
@@ -236,6 +245,54 @@ class QLMIORouter:
                 task, len(self.servers), best, self.servers[best].name,
                 float(self.health.dead_until[best]))
         return best
+
+    def plan(self, task: int) -> dict:
+        """Price every dispatch *shape* and return the best: pure
+        prefill-and-decode-here for each healthy server, plus — when
+        ``migrate_pred`` is given — disaggregated prefill-on-A/
+        decode-on-B for every healthy, KV-compatible ordered pair (the
+        third shape the tentpole adds).  Returns ``{"server": decode
+        server, "prefill_server": prefill server or None (pure),
+        "utility": float}``; a disaggregated winner maps onto
+        ``Cluster.submit(server=prefill_server, decode_server=server)``.
+        The completion bonus is judged at the decode server — in a
+        KV-compatible fleet both phases run the same model, so quality
+        rides with whoever finishes the answer."""
+        n = len(self.servers)
+        t_eff = self._effective_latency(task)
+        healthy = self.health.healthy(self.now)
+        strag = np.array([self.health.straggler_factor(s)
+                          for s in range(n)])
+        b_hat = np.array([self.mgqp(task, s) for s in range(n)])
+        # (total_s, decode_server, prefill_server-or-None) per shape
+        shapes = [((t_eff[s] + self.queue_s[s]) * strag[s], s, None)
+                  for s in range(n) if healthy[s]]
+        if self.migrate_pred is not None:
+            for sp in range(n):
+                for sd in range(n):
+                    if sp == sd or not (healthy[sp] and healthy[sd]):
+                        continue
+                    t = self.migrate_pred(task, sp, sd)
+                    if t is None:  # KV-incompatible pair
+                        continue
+                    # both servers are busy for (parts of) the request;
+                    # charge the worse backlog and the worse straggler
+                    total = ((t + max(self.queue_s[sp], self.queue_s[sd]))
+                             * max(strag[sp], strag[sd]))
+                    shapes.append((total, sd, sp))
+        if not shapes:  # every server in cooldown: mirror route()
+            best = int(np.argmin(self.health.dead_until))
+            logger.warning(
+                "task %s: all %d servers unhealthy; plan falls back to "
+                "soonest-recovering server %d (%s)", task, n, best,
+                self.servers[best].name)
+            return {"server": best, "prefill_server": None,
+                    "utility": -np.inf}
+        norm = max(min(t for t, _, _ in shapes), 1e-6)
+        utility = lambda e: -e[0] / norm + self.w * (3.0 * b_hat[e[1]] - 2.0)
+        best = max(shapes, key=utility)
+        return {"server": best[1], "prefill_server": best[2],
+                "utility": float(utility(best))}
 
     # -------------------------------------------------------------- dispatch
     def _drain_queues(self):

@@ -135,6 +135,35 @@ def kv_bytes_per_token(model: ModelProfile, kv_dtype: str = "bf16") -> float:
     return 2.0 * L * hkv * per_head
 
 
+def kv_migrate_bytes(model: ModelProfile, n_tokens,
+                     kv_dtype: str = "bf16") -> float:
+    """Bytes a KV snapshot of ``n_tokens`` context costs on the wire.
+
+    Priced at the **destination** engine's ``kv_dtype``: the importer
+    converts pages to its own pool precision on adoption
+    (serving/engine._admit_imported), so an int8 edge tier receives ~half
+    the bytes a bf16 tier would for the same context — the PR 5 byte
+    saving extended to migration traffic."""
+    return float(np.asarray(n_tokens, float)
+                 * kv_bytes_per_token(model, kv_dtype))
+
+
+def migrate_link_s(nbytes, src: DeviceProfile, dst: DeviceProfile):
+    """Server->server transfer seconds for a KV snapshot: serialization
+    on the narrower of the two links plus one half-RTT on each side."""
+    bw = min(src.net_bw, dst.net_bw)
+    return np.asarray(nbytes, float) / bw + (src.rtt + dst.rtt) / 2
+
+
+def migrate_s(model: ModelProfile, n_tokens, src: DeviceProfile,
+              dst: DeviceProfile, kv_dtype: str = "bf16"):
+    """Seconds to move ``n_tokens`` of KV context from ``src`` to ``dst``
+    at the destination's ``kv_dtype`` — the cost-model view of the live
+    migration the continuum harness charges (serving/cluster.migrate)."""
+    return migrate_link_s(kv_migrate_bytes(model, n_tokens, kv_dtype),
+                          src, dst)
+
+
 def decode_s(device: DeviceProfile, model: ModelProfile, out_tokens,
              context_tokens=0.0, kv_dtype: str = "bf16") -> np.ndarray:
     """Decode roofline: every generated token streams the active weights
@@ -211,15 +240,25 @@ def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
 def latency_terms(device: DeviceProfile, model: ModelProfile, prompt_tokens,
                   difficulty, rng: np.random.Generator | None = None,
                   prefix_hit_rate=0.0, prefill_chunk: int | None = None,
-                  kv_dtype: str | None = None) -> dict:
+                  kv_dtype: str | None = None,
+                  prefill_device: DeviceProfile | None = None,
+                  migrate_kv_dtype: str | None = None) -> dict:
     """Per-term decomposition of the roofline latency — the breakdown the
     telemetry dispatch audit records per routed request
     (repro/serving/telemetry.DispatchRecord).  ``latency_s`` is the summed
     view; the op order here is identical, so ``total_s`` matches it
     bit-for-bit under every knob combination.
+
+    ``prefill_device`` (None = same device) prices the disaggregated
+    dispatch shape: prefill runs there, the prompt's KV migrates to
+    ``device`` for decode, and a ``migrate_s`` term (priced at the
+    *decode* side's KV precision — ``migrate_kv_dtype`` overrides, else
+    ``kv_dtype``, else bf16) charges the transfer.  ``migrate_s`` is 0.0
+    whenever both phases share a device.
     """
     hit = np.clip(np.asarray(prefix_hit_rate, float), 0.0, 1.0)
-    prefill = prefill_s(device, model, prompt_tokens,
+    pf_dev = prefill_device if prefill_device is not None else device
+    prefill = prefill_s(pf_dev, model, prompt_tokens,
                         prefill_chunk=prefill_chunk) * (1.0 - hit)
     out_tok = expected_out_tokens(model, np.asarray(difficulty))
     if rng is not None:
@@ -230,17 +269,24 @@ def latency_terms(device: DeviceProfile, model: ModelProfile, prompt_tokens,
         ctx = np.asarray(prompt_tokens, float) + out_tok / 2.0
         decode = decode_s(device, model, out_tok, context_tokens=ctx,
                           kv_dtype=kv_dtype)
+    migrate = 0.0
+    if prefill_device is not None and prefill_device.name != device.name:
+        migrate = migrate_s(model, prompt_tokens, prefill_device, device,
+                            kv_dtype=migrate_kv_dtype or kv_dtype or "bf16")
     # request up + (byte-free) response down == payload/bw + rtt, the
     # historical transmission term
     trans = uplink_s(_PAYLOAD, device) + downlink_s(0.0, device)
     return {"prefill_s": prefill, "decode_s": decode, "link_s": trans,
-            "total_s": prefill + decode + trans}
+            "migrate_s": migrate,
+            "total_s": prefill + decode + trans + migrate}
 
 
 def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
               difficulty, rng: np.random.Generator | None = None,
               prefix_hit_rate=0.0, prefill_chunk: int | None = None,
-              kv_dtype: str | None = None):
+              kv_dtype: str | None = None,
+              prefill_device: DeviceProfile | None = None,
+              migrate_kv_dtype: str | None = None):
     """Roofline latency; lognormal noise if rng given.
 
     ``prefix_hit_rate`` is the expected fraction of prompt tokens already
@@ -265,7 +311,9 @@ def latency_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
     return latency_terms(device, model, prompt_tokens, difficulty, rng=rng,
                          prefix_hit_rate=prefix_hit_rate,
                          prefill_chunk=prefill_chunk,
-                         kv_dtype=kv_dtype)["total_s"]
+                         kv_dtype=kv_dtype,
+                         prefill_device=prefill_device,
+                         migrate_kv_dtype=migrate_kv_dtype)["total_s"]
 
 
 def success_prob(model: ModelProfile, difficulty, affinity=0.0) -> np.ndarray:

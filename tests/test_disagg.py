@@ -1,0 +1,403 @@
+"""Disaggregated prefill/decode: KV snapshot export/import correctness
+(bit-identical cross-engine resume under bf16/int8 and chunked/monolithic
+prefill), refcount/CoW integrity of in-flight snapshots, prefix-trie
+re-registration on the receiving pool, destination-priced migration cost
+(int8 tiers pay ~half), cluster-level charged transfers with ``kv_migrate``
+spans, the backlog-triggered rebalance policy, and the router's third
+dispatch shape (prefill-here/decode-there)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.cluster import Cluster, build_continuum
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import ceil_blocks, full_blocks
+from repro.serving.router import QLMIORouter, ServerHandle
+from repro.serving.telemetry import Telemetry
+from repro.sim import cost_model as cm
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(model, params, **kw)
+
+
+def _prompt(cfg, n=23, seed=0):
+    return np.random.default_rng(seed).integers(1, cfg.vocab, n).astype(
+        np.int64)
+
+
+def _decode_until(eng, uid, min_tokens):
+    """Step until request ``uid`` is in a decode slot with at least
+    ``min_tokens`` output tokens."""
+    req = None
+    for _ in range(10_000):
+        slot = eng.slot_of_request(uid)
+        if slot is not None:
+            req = eng.slots[slot]
+            if len(req.output) >= min_tokens:
+                return req
+        eng.step()
+    raise AssertionError(f"request {uid} never reached {min_tokens} tokens")
+
+
+# ------------------------------------------------- bit-identical resume
+
+
+@pytest.mark.parametrize("kv_dtype,chunk", [
+    ("bf16", 8), ("bf16", 0), ("int8", 8), ("int8", 0)])
+def test_migrate_bit_identity(qwen, kv_dtype, chunk):
+    """Prefill on engine A, decode on engine B: greedy tokens match the
+    single-engine run exactly, with no prefill pass on B — for both KV
+    precisions, chunked and monolithic prefill, and both a fresh import
+    and a re-import whose prompt blocks already sit in B's trie."""
+    cfg, model, params = qwen
+    prompt = _prompt(cfg)
+    B = _engine(model, params, kv_dtype=kv_dtype, prefill_chunk=chunk)
+    base_req = Request(0, prompt.copy(), max_new_tokens=12)
+    B.submit(base_req)
+    B.run_until_drained()
+    base = tuple(base_req.output)
+    assert len(base) == 12
+    B.reset_prefix_cache()  # cold trie: the import must carry everything
+
+    A = _engine(model, params, kv_dtype=kv_dtype, prefill_chunk=chunk)
+    js = (1, 4) if (kv_dtype == "bf16" and chunk) else (1,)
+    for uid, j in enumerate(js, start=1):
+        req = Request(uid, prompt.copy(), max_new_tokens=12)
+        A.submit(req)
+        _decode_until(A, uid, j)
+        pc_before = B.prefill_tokens_computed
+        moved, snap = A.evacuate(uid)
+        assert moved is req and req.imported is snap
+        assert A.slot_of_request(uid) is None
+        assert snap.kv_dtype == kv_dtype
+        assert snap.num_tokens == len(prompt) + len(req.output) - 1
+        B.submit(req)
+        B.run_until_drained()
+        assert tuple(req.output) == base
+        # decode-phase admission: B never ran a prefill pass
+        assert B.prefill_tokens_computed == pc_before
+    # export/import byte accounting moved real pages
+    assert A.metrics.counter("kv_exported_pages").value > 0
+    assert B.metrics.counter("kv_imported_pages").value > 0
+    assert (A.metrics.counter("kv_export_bytes").value
+            == A.metrics.counter("kv_exported_pages").value * A.page_bytes())
+
+
+def test_midstream_resume_exact_token(qwen):
+    """Evacuation after j decoded tokens resumes at exactly output[-1]:
+    the destination produces precisely the remaining tokens."""
+    cfg, model, params = qwen
+    prompt = _prompt(cfg, seed=3)
+    B = _engine(model, params)
+    base_req = Request(0, prompt.copy(), max_new_tokens=10)
+    B.submit(base_req)
+    B.run_until_drained()
+    base = tuple(base_req.output)
+    B.reset_prefix_cache()
+
+    A = _engine(model, params)
+    req = Request(1, prompt.copy(), max_new_tokens=10)
+    A.submit(req)
+    _decode_until(A, 1, 4)
+    A.evacuate(1)
+    j = len(req.output)
+    assert tuple(req.output) == base[:j]
+    d0 = B.metrics.counter("decode_tokens").value
+    B.submit(req)
+    B.run_until_drained()
+    assert tuple(req.output) == base
+    assert B.metrics.counter("decode_tokens").value - d0 == len(base) - j
+
+
+# ------------------------------------------- snapshot / pool integrity
+
+
+def test_snapshot_survives_source_eviction(qwen):
+    """An in-flight snapshot is a self-contained host copy: churning the
+    source pool (eviction + page reuse) after export cannot corrupt it,
+    and export itself leaks no refcounts."""
+    cfg, model, params = qwen
+    prompt = _prompt(cfg, seed=5)
+    B = _engine(model, params)
+    base_req = Request(0, prompt.copy(), max_new_tokens=8)
+    B.submit(base_req)
+    B.run_until_drained()
+    base = tuple(base_req.output)
+    B.reset_prefix_cache()
+
+    # tiny pool so the churn below recycles the evacuated request's pages
+    A = _engine(model, params, num_pages=1 + 2 * ceil_blocks(64, 8))
+    req = Request(1, prompt.copy(), max_new_tokens=8)
+    A.submit(req)
+    _decode_until(A, 1, 2)
+    ref_before = list(A.pool.ref)
+    snap = A.export_kv(1)
+    assert list(A.pool.ref) == ref_before  # refs held then fully released
+    k_before = {n: v.copy() for n, v in snap.leaves.items()}
+    A.evacuate(1)
+    for uid in range(2, 6):  # churn: unrelated prompts recycle the pages
+        other = Request(uid, _prompt(cfg, n=31, seed=100 + uid),
+                        max_new_tokens=8)
+        A.submit(other)
+    A.run_until_drained()
+    assert A.pool.stats()["evictions"] > 0 or A.pool.pages_in_use() == 0
+    for name, v in snap.leaves.items():
+        np.testing.assert_array_equal(v, k_before[name])
+    B.submit(req)
+    B.run_until_drained()
+    assert tuple(req.output) == base
+
+
+def test_prefix_reregistration_gives_receiver_hits(qwen):
+    """Importing a snapshot re-registers its prompt blocks in the
+    receiving pool's trie: a later same-prompt request on the receiver
+    reuses them without recomputation."""
+    cfg, model, params = qwen
+    prompt = _prompt(cfg, n=24, seed=7)  # 3 exact pages
+    A = _engine(model, params)
+    B = _engine(model, params)
+    req = Request(1, prompt.copy(), max_new_tokens=8)
+    A.submit(req)
+    _decode_until(A, 1, 1)
+    A.evacuate(1)
+    B.submit(req)
+    B.run_until_drained()
+    first = tuple(req.output)
+    assert B.prefix_tokens_reused == 0  # cold import, nothing local yet
+
+    again = Request(2, prompt.copy(), max_new_tokens=8)
+    B.submit(again)
+    B.run_until_drained()
+    assert tuple(again.output) == first
+    assert B.prefix_tokens_reused > 0
+    assert B.pool.stats()["prefix_hits"] > 0
+
+
+def test_import_validation(qwen):
+    """Geometry/page-size mismatches and non-mid-decode requests are
+    rejected at submit; export demands a decode-phase request."""
+    cfg, model, params = qwen
+    A = _engine(model, params)
+    req = Request(1, _prompt(cfg), max_new_tokens=8)
+    A.submit(req)
+    with pytest.raises(ValueError, match="not in decode phase"):
+        A.export_kv(1)  # still queued
+    _decode_until(A, 1, 1)
+    _, snap = A.evacuate(1)
+
+    wrong_ps = _engine(model, params, page_size=16)
+    with pytest.raises(ValueError, match="page_size"):
+        wrong_ps.submit(req)
+    done = Request(2, _prompt(cfg), max_new_tokens=8, output=[1, 2])
+    done.imported = snap
+    done.done = True
+    B = _engine(model, params)
+    with pytest.raises(ValueError, match="mid-decode"):
+        B.submit(done)
+
+
+# --------------------------------------------------- migration pricing
+
+
+def test_int8_destination_halves_migrate_cost():
+    """Satellite: migration is priced at the destination's kv_dtype, so
+    an int8 edge tier receives ~half the bytes (and, bytes-dominated,
+    ~half the time) a bf16 destination would."""
+    prof = cm.MODELS["qwen3vl-30b"]
+    src, dst = cm.DEVICES["rtx5090"], cm.DEVICES["jetson_orin_nano"]
+    n = 4096
+    b_bf16 = cm.kv_migrate_bytes(prof, n, "bf16")
+    b_int8 = cm.kv_migrate_bytes(prof, n, "int8")
+    L, hkv, dh = prof.kv_layout
+    assert b_bf16 == n * 2 * L * hkv * dh * 2
+    assert b_bf16 / b_int8 > 1.5  # 2x values, minus the fp32 scale rows
+    t_bf16 = cm.migrate_s(prof, n, src, dst, kv_dtype="bf16")
+    t_int8 = cm.migrate_s(prof, n, src, dst, kv_dtype="int8")
+    assert t_int8 < t_bf16
+    assert t_bf16 / t_int8 > 1.5  # bytes dominate the shared RTT at 4k ctx
+
+
+def test_latency_terms_migrate_term():
+    """latency_terms grows a migrate_s term: zero for the pure shapes,
+    the cost-model roofline for split prefill/decode devices, and
+    latency_s stays the exact sum."""
+    dev_d = cm.DEVICES["jetson_orin_nano"]
+    dev_p = cm.DEVICES["rtx5090"]
+    prof = cm.MODELS["qwen3vl-8b"]
+    pure = cm.latency_terms(dev_d, prof, 512, 0.5)
+    assert pure["migrate_s"] == 0.0
+    same = cm.latency_terms(dev_d, prof, 512, 0.5, prefill_device=dev_d)
+    assert same["migrate_s"] == 0.0
+    split = cm.latency_terms(dev_d, prof, 512, 0.5, prefill_device=dev_p,
+                             migrate_kv_dtype="int8")
+    want = cm.migrate_s(prof, 512, dev_p, dev_d, kv_dtype="int8")
+    assert split["migrate_s"] == pytest.approx(want)
+    assert split["total_s"] == pytest.approx(
+        split["prefill_s"] + split["decode_s"] + split["link_s"]
+        + split["migrate_s"])
+    assert cm.latency_s(dev_d, prof, 512, 0.5, prefill_device=dev_p,
+                        migrate_kv_dtype="int8") == pytest.approx(
+        split["total_s"])
+    # prefill priced on the prefill device (faster than the edge decode)
+    assert split["prefill_s"] < pure["prefill_s"]
+
+
+# ------------------------------------------------- cluster-level moves
+
+
+@pytest.fixture(scope="module")
+def twin_cluster():
+    """Two cloud-class handles sharing arch + weights (KV-compatible,
+    bit-identical capable), with tracing on."""
+    tm = Telemetry(trace=True)
+    handles = build_continuum([(2, 2)], arch="qwen2-0.5b", param_seed=0,
+                              telemetry=tm, max_seq=64, page_size=8)
+    return Cluster(handles, timeout_s=60.0), tm
+
+
+def test_cluster_charged_migration(twin_cluster):
+    """A planned prefill-on-0/decode-on-1 dispatch produces the same
+    tokens as the pure run, moves the record to the decode server, emits
+    a kv_migrate span with real bytes, and pays the link time on the
+    virtual clock."""
+    cl, tm = twin_cluster
+    cl.reset()
+    h0, h1 = cl.handles
+    prompt = _prompt(h0.cfg, seed=11)
+    uid = cl.submit(0, 0, prompt, 10, t_arrival=0.0)
+    cl.drain()
+    pure = cl.collect()[0]
+    base = tuple(cl.records[uid]["req"].output)
+
+    cl.reset()
+    uid = cl.submit(0, 0, prompt, 10, t_arrival=0.0, decode_server=1)
+    cl.drain()
+    rec = cl.collect()[0]
+    req = cl.records[uid]["req"]
+    assert tuple(req.output) == base
+    assert cl.records[uid]["server"] == 1
+    assert not rec["timeout"]
+    spans = [e for e in tm.tracer.events if e.get("name") == "kv_migrate"]
+    assert spans, "migration must be visible as a kv_migrate span"
+    s = spans[-1]
+    assert s["args"]["bytes"] > 0 and s["args"]["pages"] > 0
+    assert s["args"]["src"] == h0.name and s["args"]["dst"] == h1.name
+    # bytes are destination-priced pages
+    assert (s["args"]["bytes"]
+            == s["args"]["pages"] * h1.engine.page_bytes())
+    assert h0.engine.metrics.counter("kv_migrate_out_bytes").value \
+        == h1.engine.metrics.counter("kv_migrate_in_bytes").value \
+        == s["args"]["bytes"]
+    # the transfer is charged on the virtual clock: same decode speed on
+    # both handles, so the split run can only be slower than the pure one
+    assert rec["e2e_s"] > pure["e2e_s"]
+
+
+def test_cluster_rebalance_threshold(twin_cluster):
+    """rebalance() evacuates from a handle whose backlog crosses the
+    threshold — and leaves a fleet under the threshold alone."""
+    cl, tm = twin_cluster
+    cl.reset()
+    h0 = cl.handles[0]
+    prompt = _prompt(h0.cfg, seed=13)
+    for k in range(6):  # pile everything onto handle 0
+        cl.submit(0, k, prompt, 10, t_arrival=0.0)
+    cl.advance_to(h0.uplink_s() + 6 * h0.decode_tick_s)
+    assert h0._load()["backlog_s"] > 0
+    assert cl.rebalance(threshold_s=1e9) == []  # nobody over threshold
+    moves = cl.rebalance(threshold_s=1e-6)
+    assert len(moves) == 1
+    assert moves[0]["src"] == 0 and moves[0]["dst"] == 1
+    assert moves[0]["bytes"] > 0
+    cl.drain()
+    recs = cl.collect()
+    assert all(not r["timeout"] for r in recs)
+    moved = next(r for r in recs if r["uid"] == moves[0]["uid"])
+    assert moved["server"] == 1 and moved["n_tokens"] == 10
+
+
+def test_predict_disagg_terms(twin_cluster):
+    """The disaggregated predictor decomposes into the expected terms and
+    its migrate term matches the cost-model link roofline."""
+    cl, _ = twin_cluster
+    cl.reset()
+    total, terms = cl.predict_disagg_e2e_s(0, 1, 23, 10)
+    assert set(terms) == {"queue", "prefill", "migrate", "queue_decode",
+                          "decode", "media", "link"}
+    assert total == pytest.approx(sum(terms.values()))
+    hd = cl.handles[1]
+    pages = ceil_blocks(24, hd.engine.page_size)
+    want = cm.migrate_link_s(pages * hd.engine.page_bytes(),
+                             cl.handles[0].device, hd.device)
+    assert terms["migrate"] == pytest.approx(float(want))
+
+
+# -------------------------------------------------- router third shape
+
+
+def _stub_router(latencies, migrate, **kw):
+    servers = [ServerHandle(name=f"s{i}", model_id=0, device_id=0,
+                            is_cloud=False,
+                            execute=lambda t, v=v: (v, True))
+               for i, v in enumerate(latencies)]
+    return QLMIORouter(servers, milp_pred=lambda t, s: latencies[s],
+                       mgqp_pred=lambda t, s: 0.9,
+                       migrate_pred=migrate, **kw)
+
+
+def test_router_plan_prefers_cheap_disagg_pair():
+    """plan() picks prefill-here/decode-there when the pair beats every
+    pure shape, and reports the mapping the cluster submit needs."""
+    r = _stub_router([10.0, 10.0],
+                     migrate=lambda t, sp, sd: 2.0)
+    p = r.plan(0)
+    assert p["prefill_server"] is not None
+    assert p["server"] != p["prefill_server"]
+
+
+def test_router_plan_falls_back_to_pure():
+    """Without migrate_pred — or when every pair is incompatible (None)
+    or more expensive — plan() degrades to the pure argmax route()."""
+    r = _stub_router([1.0, 5.0], migrate=None)
+    p = r.plan(0)
+    assert p == {"server": 0, "prefill_server": None,
+                 "utility": pytest.approx(p["utility"])}
+    r2 = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: None)
+    assert r2.plan(0)["prefill_server"] is None
+    r3 = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: 50.0)
+    assert r3.plan(0) == {"server": 0, "prefill_server": None,
+                          "utility": pytest.approx(r3.plan(0)["utility"])}
+
+
+def test_router_plan_skips_unhealthy():
+    """A dead server appears in no shape — pure or pair."""
+    r = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: 0.5)
+    r.health.dead_until[0] = 100.0  # server 0 in cooldown
+    p = r.plan(0)
+    assert p["server"] == 1 and p["prefill_server"] is None
+
+
+# --------------------------------------------------- shared block math
+
+
+def test_block_math_helpers():
+    assert ceil_blocks(0, 8) == 0
+    assert ceil_blocks(1, 8) == 1
+    assert ceil_blocks(8, 8) == 1
+    assert ceil_blocks(9, 8) == 2
+    assert full_blocks(7, 8) == 0
+    assert full_blocks(8, 8) == 1
+    assert full_blocks(15, 8) == 1
