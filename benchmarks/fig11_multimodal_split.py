@@ -42,6 +42,7 @@ from repro.models.mm_encoder import (  # noqa: E402
     init_mm_encoder,
 )
 from repro.serving.cluster import Cluster, build_continuum  # noqa: E402
+from repro.serving.request import ContinuumRequest  # noqa: E402
 from repro.serving.segments import EmbedSegment, TextSegment  # noqa: E402
 from repro.serving.telemetry import Telemetry  # noqa: E402
 from repro.sim import cost_model as cm  # noqa: E402
@@ -186,9 +187,11 @@ def run():
             # request; the audit joins the measured e2e at collect()
             predicted, terms = handles[s].predict_e2e_s(
                 L, budget_tok, media_delay_s=delay)
-            uid = cluster.submit(s, task, toks, budget_tok, t_arrival=t,
-                                 quality_ok=quality_ok, segments=segs,
-                                 media_delay_s=delay)
+            uid = cluster.submit(ContinuumRequest(
+                tokens=toks, segments=segs, max_new_tokens=budget_tok,
+                arrival_s=t, task=task, quality_ok=quality_ok,
+                media_delay_s=delay, server=s,
+                predicted_s=float(predicted)))
             tm.record_dispatch(task=task, server=s, t=t,
                                predicted_s=predicted, uid=uid, terms=terms,
                                policy_est_s=float(total[s]))

@@ -44,6 +44,7 @@ from benchmarks.common import emit  # noqa: E402
 from benchmarks.fig10_continuum_replay import analytic_predictors  # noqa: E402
 
 from repro.serving.cluster import Cluster, build_continuum  # noqa: E402
+from repro.serving.request import ContinuumRequest  # noqa: E402
 from repro.serving.telemetry import Telemetry  # noqa: E402
 from repro.sim import cost_model as cm  # noqa: E402
 from repro.sim.miobench import SERVER_CLASSES, generate  # noqa: E402
@@ -160,9 +161,10 @@ def run():
             budget_tok = gen_budget(task, s)
             predicted, terms = handles[s].predict_e2e_s(
                 len(toks), budget_tok)
-            uid = cluster.submit(s, task, toks, budget_tok, t_arrival=t,
-                                 quality_ok=quality_ok,
-                                 decode_server=decode_server)
+            uid = cluster.submit(ContinuumRequest(
+                tokens=toks, max_new_tokens=budget_tok, arrival_s=t,
+                task=task, quality_ok=quality_ok, server=s,
+                decode_server=decode_server, predicted_s=float(predicted)))
             tm.record_dispatch(task=task, server=s, t=t,
                                predicted_s=predicted, uid=uid, terms=terms,
                                policy_est_s=float(tot))

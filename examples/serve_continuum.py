@@ -64,3 +64,20 @@ for name, policy in [("all_cloud", all_cloud_policy(servers)),
 print("live load probes (post-drain, all idle):")
 for h in handles:
     print(f"    {h.name}: {h.load()}")
+
+# the streaming front end: per-token delivery on the same virtual clock —
+# tokens surface as they decode, TTFT is measured at the first streamed
+# chunk instead of the drained response payload
+from repro.serving.request import ContinuumRequest  # noqa: E402
+
+cluster.reset()
+prompt = rng.integers(1, handles[0].cfg.vocab, 16).astype(np.int32)
+uid = cluster.submit(ContinuumRequest(tokens=prompt, max_new_tokens=6,
+                                      task=0, server=1, stream=True))
+print("streamed tokens:")
+for ev in cluster.stream(until=30.0):
+    print(f"    #{ev.index} tok={ev.token} t_user={ev.t_user:.4f}s"
+          + ("  (first)" if ev.first else "")
+          + ("  (final)" if ev.final else ""))
+rec = [r for r in cluster.collect() if r["uid"] == uid][0]
+print(f"    streamed ttft {rec['ttft_s']:.4f}s  e2e {rec['e2e_s']:.4f}s")

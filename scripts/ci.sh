@@ -52,11 +52,24 @@ PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig12_disaggregation.py \
     --smoke --trace results/fig12_trace.json
 python scripts/trace_report.py results/fig12_trace.json
 
+# 100-engine scale-out smoke with tracing: 10k Poisson-arrival requests
+# replayed over 100 sim-backend engines on the event-heap clock; asserts
+# the O(active) property (identical trace -> identical handle-step count
+# on a 10- vs 90-engine fleet, gated below) and that per-token streaming
+# strictly improves measured TTFT; the exported trace (a CI artifact)
+# must render a per-stage + queue-wait report
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig13_scaleout.py \
+    --smoke --trace results/fig13_trace.json
+python scripts/trace_report.py results/fig13_trace.json
+
 # benchmark regression gate: kernel/serving numbers + the fig10 replay's
-# cost_model.mean_abs_pct_err + the fig12 migration headline metrics,
-# all vs. benchmarks/baseline.json
+# cost_model.mean_abs_pct_err + the fig12 migration headline metrics +
+# the fig13 scale-out headline metrics (incl. the deterministic
+# fig13.oactive_steps_large O(active) gate), all vs.
+# benchmarks/baseline.json
 python scripts/check_bench.py results/bench.json \
-    results/fig10_continuum_replay.json results/fig12_disaggregation.json
+    results/fig10_continuum_replay.json results/fig12_disaggregation.json \
+    results/fig13_scaleout.json
 
 # multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
 # ship vs edge-encode) must beat both fixed policies on mean e2e latency

@@ -98,6 +98,34 @@ def engine_utilization(trace: dict, buckets: int = 20) -> "list[dict]":
     return out
 
 
+def queue_wait(trace: dict, buckets: int = 20) -> dict:
+    """Admission-queue pressure: percentiles of the per-request ``queue``
+    lifecycle span (submit -> batch admission) plus a fleet-aggregate
+    depth timeline from the ``queue_depth`` counter samples each engine
+    emits per tick."""
+    waits = [ev["dur"] / _US for ev in spans(trace)
+             if ev.get("cat") == "lifecycle" and ev["name"] == "queue"]
+    samples = [(ev["ts"] / _US, sum(int(v) for v in
+                                    ev.get("args", {}).values()))
+               for ev in trace.get("traceEvents", [])
+               if ev.get("ph") == "C" and ev["name"] == "queue_depth"]
+    timeline = np.zeros(buckets)
+    peak = 0
+    if samples:
+        horizon = max(t for t, _ in samples) or 1.0
+        counts = np.zeros(buckets)
+        for t, depth in samples:
+            b = min(int(t / horizon * buckets), buckets - 1)
+            timeline[b] += depth
+            counts[b] += 1
+            peak = max(peak, depth)
+        timeline = np.divide(timeline, np.maximum(counts, 1))
+    return {"n": len(waits), "p50_s": _pct(waits, 50),
+            "p95_s": _pct(waits, 95), "max_s": max(waits, default=0.0),
+            "samples": len(samples), "peak_depth": peak,
+            "timeline": timeline}
+
+
 def migration_traffic(trace: dict) -> "dict[str, dict]":
     """KV pages moved per engine, from ``kv_migrate`` spans: bytes/pages
     received (the span's pid is the destination) and sent (matched on the
@@ -159,6 +187,22 @@ def report(trace: dict, top: int = 5) -> str:
     for u in util:
         lines.append(f"{u['engine']:<36}{100 * u['busy_frac']:>6.1f}%  "
                      f"[{_bar(u['timeline'])}]")
+
+    qw = queue_wait(trace)
+    lines.append("")
+    lines.append("== admission queue wait (submit -> batch admission) ==")
+    if qw["n"]:
+        lines.append(f"n={qw['n']}  p50={qw['p50_s']:.4f}s  "
+                     f"p95={qw['p95_s']:.4f}s  max={qw['max_s']:.4f}s")
+    else:
+        lines.append("(no queue spans in this trace)")
+    if qw["samples"]:
+        depth = qw["timeline"]
+        scale = max(float(depth.max()), 1.0)
+        lines.append(f"fleet queue depth (mean of {qw['samples']} samples, "
+                     f"peak {qw['peak_depth']}):")
+        lines.append(f"{'depth':<10}{depth.mean():>6.2f} avg  "
+                     f"[{_bar(np.clip(depth / scale, 0.0, 1.0))}]")
 
     traffic = migration_traffic(trace)
     if traffic:

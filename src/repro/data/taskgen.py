@@ -133,3 +133,57 @@ def splits(n: int, seed: int = 0, ratios=(0.8, 0.1, 0.1)):
     n_tr = int(ratios[0] * n)
     n_va = int(ratios[1] * n)
     return order[:n_tr], order[n_tr:n_tr + n_va], order[n_tr + n_va:]
+
+
+# --------------------------------------------------------- arrival traces
+# Request *timing* for the scale-out replay (benchmarks/fig13_scaleout.py):
+# the taskset says what the requests are, these say when they arrive.
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0) -> np.ndarray:
+    """``n`` arrival times (seconds, sorted, starting after 0) of a
+    homogeneous Poisson process with mean ``rate_per_s`` requests/s —
+    i.i.d. exponential inter-arrival gaps."""
+    if rate_per_s <= 0:
+        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, n))
+
+
+def diurnal_arrivals(n: int, rate_per_s: float, period_s: float,
+                     seed: int = 0, depth: float = 0.8) -> np.ndarray:
+    """``n`` arrivals of an inhomogeneous Poisson process whose rate
+    swings sinusoidally around ``rate_per_s`` — the classic diurnal
+    serving load, compressed to ``period_s`` so a replay sees whole
+    peak/trough cycles.  ``depth`` in [0, 1) scales the swing:
+    ``rate(t) = rate_per_s * (1 + depth * sin(2 pi t / period_s))``.
+    Generated by thinning (Lewis & Shedler): candidates at the peak rate,
+    kept with probability rate(t)/peak."""
+    if not 0.0 <= depth < 1.0:
+        raise ValueError(f"depth must be in [0, 1), got {depth}")
+    if rate_per_s <= 0 or period_s <= 0:
+        raise ValueError("rate_per_s and period_s must be positive")
+    rng = np.random.default_rng(seed)
+    peak = rate_per_s * (1.0 + depth)
+    out = np.empty(n)
+    t, i = 0.0, 0
+    while i < n:
+        t += rng.exponential(1.0 / peak)
+        rate = rate_per_s * (1.0 + depth * np.sin(2.0 * np.pi * t / period_s))
+        if rng.random() * peak < rate:
+            out[i] = t
+            i += 1
+    return out
+
+
+def session_ids(n: int, n_sessions: int, seed: int = 0,
+                concentration: float = 1.2) -> np.ndarray:
+    """Assign each of ``n`` requests to one of ``n_sessions``
+    conversations (Zipf-ish popularity via a Dirichlet draw): requests in
+    a session share a prompt prefix, which is what prefix-affinity
+    routing and the engines' prefix caches exploit."""
+    if n_sessions < 1:
+        raise ValueError(f"n_sessions must be >= 1, got {n_sessions}")
+    rng = np.random.default_rng(seed + 7)
+    weights = rng.dirichlet(np.full(n_sessions, concentration))
+    return rng.choice(n_sessions, size=n, p=weights).astype(np.int64)

@@ -1,4 +1,13 @@
-from repro.serving.engine import ServingEngine  # noqa: F401
+"""Public surface of the continuum serving stack.
+
+Light names import eagerly; the cluster harness (``Cluster``,
+``EngineHandle``, ``SimEngine``, ``EngineBackend``, ``build_continuum``)
+pulls in model building, so those resolve lazily via ``__getattr__`` —
+``from repro.serving import Cluster`` works, but router-only / cost-model
+consumers never pay the import.
+"""
+from repro.serving.engine import KVSnapshot, Request, ServingEngine  # noqa: F401
+from repro.serving.request import ContinuumRequest, StreamEvent  # noqa: F401
 from repro.serving.router import (  # noqa: F401
     HealthTracker,
     QLMIORouter,
@@ -11,9 +20,22 @@ from repro.serving.telemetry import (  # noqa: F401
     Tracer,
 )
 
-__all__ = ["ServingEngine", "HealthTracker", "QLMIORouter", "ServerHandle",
-           "SimulatedServer", "Telemetry", "MetricsRegistry", "Tracer"]
+_LAZY = ("Cluster", "EngineHandle", "EngineBackend", "SimEngine",
+         "build_continuum")
 
-# repro.serving.cluster (the continuum replay harness) is imported lazily
-# by its users: it pulls in model building, which this package's light
-# consumers (router-only tests, cost-model sims) should not pay for.
+__all__ = ["ServingEngine", "Request", "KVSnapshot",
+           "ContinuumRequest", "StreamEvent",
+           "HealthTracker", "QLMIORouter", "ServerHandle",
+           "SimulatedServer", "Telemetry", "MetricsRegistry", "Tracer",
+           *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.serving import cluster
+        return getattr(cluster, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

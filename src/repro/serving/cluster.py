@@ -48,17 +48,22 @@ registry, so per-replay stats stay independent.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
+import math
+import warnings
+from collections import deque
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, _PrefillTask
 from repro.serving.kv_cache import ceil_blocks
+from repro.serving.request import ContinuumRequest, StreamEvent
 from repro.serving.router import ServerHandle
-from repro.serving.telemetry import latency_summary
+from repro.serving.telemetry import MetricsRegistry, latency_summary
 from repro.sim import cost_model as cm
 from repro.sim.cemllm import CostModelBackend
 from repro.sim.miobench import SERVER_CLASSES
@@ -66,6 +71,295 @@ from repro.sim.miobench import SERVER_CLASSES
 # live-engine arch per MIOBench server class (SERVER_CLASSES order):
 # edge tiers run the small/fast config, the cloud tier a larger one.
 CLASS_ARCHS = ["qwen2-0.5b", "qwen2-0.5b", "llama3.2-3b"]
+
+
+class SimEngine:
+    """Analytic drop-in for ``ServingEngine`` at fleet scale.
+
+    A 100+ engine replay cannot afford 100 model builds + XLA compiles,
+    and does not need them: the continuum harness charges virtual time
+    from *counters* (decode ticks, prefill tokens computed), not from
+    the numerical content of the tokens.  This class implements exactly
+    the surface ``EngineHandle``/``Cluster``/``QLMIORouter._load`` read —
+    queue/slots/prefill_tasks/budget, ``submit``/``step``/``busy``, the
+    same metrics-registry counter names, streaming emission, and a
+    page-granular prefix cache — while generating deterministic
+    hash-derived tokens in plain Python.  ``paged`` is False, so
+    ``kv_compatible`` correctly reports sim engines as non-migratable.
+
+    Fidelity scope: chunked prefill under a per-tick token budget, one
+    decode token per slot per tick, continuous batching, prefix reuse at
+    ``page_size`` granularity.  Not modeled: KV pool pressure (admission
+    never blocks on pages), bucketed-shape padding, KV snapshots.
+    """
+
+    def __init__(self, vocab: int, *, max_batch: int = 4,
+                 max_seq: int = 256, eos_id: "int | None" = None,
+                 prefill_chunk: int = 64,
+                 prefill_budget: "int | None" = None,
+                 page_size: int = 16, prefix_caching: bool = True,
+                 clock=None, telemetry=None, trace_name: str = "sim"):
+        self.vocab = vocab
+        self._now = clock if clock is not None else (lambda: float(self.ticks))
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.paged = False
+        self.kv_dtype = "bf16"
+        self.chunked = prefill_chunk > 0
+        self.prefill_chunk = max(prefill_chunk, 1)
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else 2 * self.prefill_chunk)
+        self.bucketing = False
+        self.min_bucket = 1
+        self.page_size = page_size
+        self.prefix_caching = prefix_caching
+        self._prefixes: set = set()  # hashes of page-aligned prompt prefixes
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_batch
+        self.prefill_tasks: list[_PrefillTask | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int64)
+        self.budget = np.zeros(max_batch, np.int64)
+        self.ticks = 0
+        self.finished: list[Request] = []
+        self.telemetry = telemetry
+        self.metrics = m = MetricsRegistry()
+        self._c_prefill_computed = m.counter("prefill_tokens_computed")
+        self._c_prefill_padded = m.counter("prefill_tokens_padded")
+        self._c_prefix_reused = m.counter("prefix_tokens_reused")
+        self._c_submitted = m.counter("requests_submitted")
+        self._c_finished = m.counter("requests_finished")
+        self._c_decode_tokens = m.counter("decode_tokens")
+        self._c_stream_tokens = m.counter("stream_tokens")
+        self._h_ttft = m.histogram("ttft_s")
+        self._h_itl = m.histogram("itl_s")
+        self._h_e2e = m.histogram("e2e_s")
+        self._h_queue = m.histogram("queue_s")
+        self._g_queue_depth = m.gauge("queue_depth")
+        m.view("ticks", lambda: self.ticks)
+        tr = telemetry.tracer if telemetry is not None else None
+        self._tr = tr if (tr is not None and tr.enabled) else None
+        self._pid = self._tr.process(trace_name) if self._tr else 0
+        if telemetry is not None:
+            telemetry.register_metrics(trace_name, m)
+        self._auto_uid = 1_000_000_000
+
+    # -- back-compat attribute accessors (EngineHandle tick charging)
+    @property
+    def prefill_tokens_computed(self) -> int:
+        return self._c_prefill_computed.value
+
+    @property
+    def prefill_tokens_padded(self) -> int:
+        return self._c_prefill_padded.value
+
+    # ------------------------------------------------------------ intake
+    def make_request(self, creq: ContinuumRequest,
+                     uid: "int | None" = None) -> Request:
+        if uid is None:
+            self._auto_uid += 1
+            uid = self._auto_uid
+        tokens = (None if creq.tokens is None
+                  else np.asarray(creq.tokens, np.int32))
+        return Request(uid, tokens, max_new_tokens=int(creq.max_new_tokens),
+                       extra=creq.extra, segments=creq.segments,
+                       stream=creq.stream if callable(creq.stream) else None)
+
+    def submit(self, req: "Request | ContinuumRequest") -> Request:
+        if isinstance(req, ContinuumRequest):
+            req = self.make_request(req)
+        if req.tokens is None or len(req.tokens) < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.tokens) > self.max_seq - 1:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.tokens)} tokens "
+                f"exceeds max_seq={self.max_seq} - 1")
+        if not req.token_times:
+            req.t_submit = self._now()
+        self._c_submitted.inc()
+        if self._tr is not None:
+            self._tr.instant("submit", "lifecycle", req.t_submit,
+                             pid=self._pid, tid=req.uid)
+        self.queue.append(req)
+        return req
+
+    def busy(self) -> bool:
+        return bool(self.queue or any(s is not None for s in self.slots)
+                    or any(t is not None for t in self.prefill_tasks))
+
+    # ------------------------------------------------------------ serving
+    def _token(self, req: Request) -> int:
+        """Deterministic hash-derived next token (seeded by uid + index,
+        independent of which engine decodes — so a replay is bit-identical
+        across routing policies and fleet layouts)."""
+        i = len(req.output)
+        return int((req.uid * 7919 + i * 104729 + 12345) % self.vocab)
+
+    def _prefix_reuse(self, toks: np.ndarray) -> int:
+        """Longest cached page-aligned prefix (capped at T-1, like the
+        paged engine: the last token is always recomputed)."""
+        if not self.prefix_caching:
+            return 0
+        T = len(toks)
+        k = ((T - 1) // self.page_size) * self.page_size
+        while k > 0:
+            if hash(toks[:k].tobytes()) in self._prefixes:
+                return k
+            k -= self.page_size
+        return 0
+
+    def _register_prefix(self, toks: np.ndarray, upto: int):
+        if not self.prefix_caching:
+            return
+        for k in range(self.page_size, upto + 1, self.page_size):
+            self._prefixes.add(hash(toks[:k].tobytes()))
+
+    def _emit(self, req: Request, tok: int, t: float, final: bool):
+        idx = len(req.output) - 1
+        if idx == 0 and self._tr is not None:
+            self._tr.instant("first_token", "lifecycle", t,
+                             pid=self._pid, tid=req.uid)
+        if req.stream is None:
+            return
+        self._c_stream_tokens.inc()
+        req.stream(StreamEvent(uid=req.uid, index=idx, token=tok, t_emit=t,
+                               first=idx == 0, final=final))
+
+    def _finish(self, req: Request):
+        req.done = True
+        self.finished.append(req)
+        self._c_finished.inc()
+        tt = req.token_times
+        ta = req.t_admit if req.t_admit >= req.t_submit else req.t_submit
+        self._h_queue.observe(ta - req.t_submit)
+        self._h_ttft.observe(tt[0] - req.t_submit)
+        self._h_e2e.observe(tt[-1] - req.t_submit)
+        if len(tt) > 1:
+            self._h_itl.extend(b - a for a, b in zip(tt, tt[1:]))
+        if self._tr is not None:
+            pid, tid = self._pid, req.uid
+            self._tr.span("queue", "lifecycle", req.t_submit, ta,
+                          pid=pid, tid=tid)
+            self._tr.span("prefill", "lifecycle", ta, tt[0], pid=pid,
+                          tid=tid, args={"prompt_tokens": len(req.tokens)})
+            self._tr.span("decode", "lifecycle", tt[0], tt[-1], pid=pid,
+                          tid=tid, args={"new_tokens": len(req.output)})
+
+    def _activate(self, slot: int, req: Request):
+        tok = self._token(req)
+        req.output.append(tok)
+        req.token_times.append(self._now())
+        ends = (req.max_new_tokens <= 1
+                or (self.eos_id is not None and tok == self.eos_id))
+        self._emit(req, tok, req.token_times[-1], ends)
+        if ends:
+            self._finish(req)
+            return
+        self.slots[slot] = req
+        self.pos[slot] = len(req.tokens)
+        self.budget[slot] = req.max_new_tokens - 1
+
+    def step(self) -> int:
+        """One engine tick, same contract as ``ServingEngine.step``: spend
+        the prefill budget (admitting queued requests into free slots),
+        then one decode token for every fully-prefilled slot."""
+        budget = self.prefill_budget
+        while budget > 0:
+            progressed = False
+            if self.queue:
+                free = next((i for i in range(self.max_batch)
+                             if self.slots[i] is None
+                             and self.prefill_tasks[i] is None), None)
+                if free is not None:
+                    req = self.queue.popleft()
+                    req.t_admit = self._now()
+                    toks = np.asarray(req.tokens)
+                    reuse = self._prefix_reuse(toks)
+                    self._c_prefix_reused.inc(reuse)
+                    self.prefill_tasks[free] = _PrefillTask(
+                        req, done=reuse, reused=reuse)
+                    progressed = True
+            for slot in range(self.max_batch):
+                if budget <= 0:
+                    break
+                task = self.prefill_tasks[slot]
+                if task is None:
+                    continue
+                T = len(task.req.tokens)
+                n = min(self.prefill_chunk, T - task.done, budget)
+                task.done += n
+                budget -= n
+                self._c_prefill_computed.inc(n)
+                progressed = True
+                if task.done >= T:
+                    toks = np.asarray(task.req.tokens)
+                    self._register_prefix(
+                        toks, ((T // self.page_size) * self.page_size))
+                    self.prefill_tasks[slot] = None
+                    self._activate(slot, task.req)
+            if not progressed:
+                break
+        self._g_queue_depth.set(len(self.queue))
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        n_prefilling = sum(t is not None for t in self.prefill_tasks)
+        if self._tr is not None:
+            self._tr.counter("queue_depth", self._now(),
+                             {"queued": len(self.queue),
+                              "active": len(active) + n_prefilling},
+                             pid=self._pid)
+        if not active:
+            if n_prefilling:
+                self.ticks += 1
+            return n_prefilling
+        self.ticks += 1
+        self._c_decode_tokens.inc(len(active))
+        t_now = self._now()
+        for i in active:
+            req = self.slots[i]
+            tok = self._token(req)
+            req.output.append(tok)
+            req.token_times.append(t_now)
+            self.pos[i] += 1
+            self.budget[i] -= 1
+            ends = bool(self.budget[i] <= 0 or tok == self.eos_id
+                        or self.pos[i] >= self.max_seq - 1)
+            self._emit(req, tok, t_now, ends)
+            if ends:
+                self._finish(req)
+                self.slots[i] = None
+                self.pos[i] = 0
+        return len(active) + n_prefilling
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          keep_finished: bool = False):
+        deadline = self.ticks + max_ticks
+        while self.busy():
+            self.step()
+            if self.ticks > deadline:
+                raise RuntimeError("engine did not drain")
+        if keep_finished:
+            return list(self.finished)
+        out, self.finished = self.finished, []
+        return out
+
+    def reset_prefix_cache(self):
+        if self.busy():
+            raise RuntimeError("reset_prefix_cache needs an idle engine")
+        self._prefixes.clear()
+
+    # -------------------------------------------------------------- stats
+    def latency_stats(self) -> dict:
+        """Alias for ``stats()["latency"]`` (same contract as
+        ``ServingEngine.latency_stats``)."""
+        return latency_summary(self._h_ttft.values, self._h_itl.values,
+                               self._h_e2e.values)
+
+    def stats(self) -> dict:
+        out = {"paged": False, "kv_dtype": self.kv_dtype,
+               "bucketed": False, "chunked": self.chunked, "sim": True}
+        out.update(self.metrics.snapshot())
+        out["latency"] = self.latency_stats()
+        return out
 
 
 class EngineHandle(ServerHandle):
@@ -84,11 +378,10 @@ class EngineHandle(ServerHandle):
                  seed: int = 0, max_batch: int = 2, max_seq: int = 96,
                  time_scale: float = 1.0, payload_bytes: float | None = None,
                  kv_dtype: str | None = None, fail: bool = False,
-                 telemetry=None, **engine_kw):
+                 telemetry=None, backend: str = "live", **engine_kw):
         cfg = reduced(get_config(arch))
         self.cfg = cfg
-        model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(seed))
+        self.backend = backend
         self.vtime = 0.0
         # KV precision is itself an offloading decision: edge tiers
         # default to the int8 page pool (half the decode KV stream, ~2x
@@ -97,15 +390,34 @@ class EngineHandle(ServerHandle):
         # below prices the choice, so the router sees it through every
         # backlog/latency estimate.  Quantized pages need the paged
         # backend, so recurrent/hybrid archs (dense cache) stay bf16.
-        if kv_dtype is None:
-            kv_dtype = ("int8" if model.supports_paged and not is_cloud
-                        else "bf16")
-        self.kv_dtype = kv_dtype
-        self.engine = ServingEngine(model, params, max_batch=max_batch,
-                                    max_seq=max_seq, kv_dtype=kv_dtype,
+        if backend == "sim":
+            # fleet-scale analytic engine: no weights, no XLA — the tick
+            # *costs* below still come from the profiled roofline, so the
+            # router sees the same continuum either way
+            if kv_dtype is None:
+                kv_dtype = "bf16" if is_cloud else "int8"
+            self.kv_dtype = kv_dtype
+            self.engine = SimEngine(cfg.vocab, max_batch=max_batch,
+                                    max_seq=max_seq,
                                     clock=lambda: self.vtime,
                                     telemetry=telemetry, trace_name=name,
                                     **engine_kw)
+            self.engine.kv_dtype = kv_dtype
+        elif backend == "live":
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed))
+            if kv_dtype is None:
+                kv_dtype = ("int8" if model.supports_paged and not is_cloud
+                            else "bf16")
+            self.kv_dtype = kv_dtype
+            self.engine = ServingEngine(model, params, max_batch=max_batch,
+                                        max_seq=max_seq, kv_dtype=kv_dtype,
+                                        clock=lambda: self.vtime,
+                                        telemetry=telemetry, trace_name=name,
+                                        **engine_kw)
+        else:
+            raise ValueError(f"unknown backend {backend!r} "
+                             "(expected 'live' or 'sim')")
         self.telemetry = telemetry
         tr = telemetry.tracer if telemetry is not None else None
         self._tr = tr if (tr is not None and tr.enabled) else None
@@ -128,6 +440,9 @@ class EngineHandle(ServerHandle):
             payload_bytes = cm.payload_bytes()
         self.up_s = float(cm.uplink_s(payload_bytes / 2, device))
         self.down_s = float(cm.downlink_s(payload_bytes / 2, device))
+        # one streamed token chunk's downlink time: what a streamed
+        # request pays at the tail instead of the full-payload downlink
+        self.stream_chunk_s = float(cm.stream_chunk_s(device))
         self.fail = fail
         self.pending: list = []  # min-heap of (t_ready, seq, Request)
         self._seq = 0
@@ -135,6 +450,9 @@ class EngineHandle(ServerHandle):
         # its migration scheduler so planned evacuations fire between
         # ticks, at a consistent engine state)
         self.on_step = None
+        # invoked on enqueue (Cluster wires this to its event heap so a
+        # newly-arrived / migrated request wakes an otherwise-idle handle)
+        self.on_enqueue = None
         # KV pages moved to / from other engines, in wire bytes (priced
         # at the *receiving* side's page precision)
         self._c_mig_in = self.engine.metrics.counter("kv_migrate_in_bytes")
@@ -187,6 +505,8 @@ class EngineHandle(ServerHandle):
         """Queue a request to reach this server at virtual time t_ready."""
         heapq.heappush(self.pending, (t_ready, self._seq, req))
         self._seq += 1
+        if self.on_enqueue is not None:
+            self.on_enqueue(self)
 
     def busy(self) -> bool:
         return self.engine.busy()
@@ -196,44 +516,64 @@ class EngineHandle(ServerHandle):
             _, _, req = heapq.heappop(self.pending)
             self.engine.submit(req)  # t_submit stamps self.vtime
 
-    def advance_to(self, t: float):
-        """Run whole engine ticks until the virtual clock reaches ``t``.
+    def next_wake_s(self) -> float:
+        """Virtual time of this handle's next chargeable event: now if the
+        engine holds admitted work, the head arrival if only pending, +inf
+        if idle or failed.  The cluster's event heap keys on this, so an
+        idle handle costs nothing to advance past — the O(active)
+        property the 100-engine replay rests on."""
+        if self.fail:
+            return math.inf
+        if self.busy():
+            return self.vtime
+        if self.pending:
+            return max(self.pending[0][0], self.vtime)
+        return math.inf
+
+    def step_once(self, t: float) -> bool:
+        """Run at most ONE charged engine tick without crossing ``t``.
 
         A tick is charged its dynamic cost (decode step + prefill tokens
-        it computed), so the final tick may overshoot ``t`` by less than
-        one tick.  An idle engine fast-forwards to its next arrival (or to
-        ``t``) without burning host CPU; a failed server burns the time
-        without serving anything (its requests time out).
-        """
-        while True:
+        it computed), so it may overshoot ``t`` by less than one tick.
+        An idle engine first fast-forwards to its next arrival; a failed
+        server never steps (its requests time out at drain).  Returns
+        True iff a tick was charged — the caller must then re-read
+        ``next_wake_s()``."""
+        if self.fail:
+            return False
+        self._admit_ready()
+        if not self.busy():
+            nxt = self.pending[0][0] if self.pending else math.inf
+            if nxt >= t - 1e-12:  # nothing to do before t
+                return False
+            self.vtime = max(self.vtime, nxt)
             self._admit_ready()
-            if self.vtime >= t - 1e-12:
-                return
-            if self.fail:
-                self.vtime = t
-                return
-            if not self.busy():
-                nxt = self.pending[0][0] if self.pending else t
-                if nxt >= t - 1e-12:  # nothing to do before t
-                    self.vtime = t
-                    return
-                self.vtime = max(self.vtime, nxt)
-                continue
-            e = self.engine
-            p0 = e.prefill_tokens_computed + e.prefill_tokens_padded
-            n_busy = e.step()
-            dp = e.prefill_tokens_computed + e.prefill_tokens_padded - p0
-            dt = self.decode_tick_s + dp * self.prefill_tok_s
-            if self._tr is not None:
-                # engine-side spans within one tick are zero-width under
-                # the virtual clock (vtime advances *after* the step);
-                # this span carries the tick's true virtual duration
-                self._tr.span("tick", "engine", self.vtime,
-                              self.vtime + dt, pid=self._pid,
-                              args={"prefill_tokens": dp, "busy": n_busy})
-            self.vtime += dt
-            if self.on_step is not None:
-                self.on_step(self)
+        if not self.busy() or self.vtime >= t - 1e-12:
+            return False
+        e = self.engine
+        p0 = e.prefill_tokens_computed + e.prefill_tokens_padded
+        n_busy = e.step()
+        dp = e.prefill_tokens_computed + e.prefill_tokens_padded - p0
+        dt = self.decode_tick_s + dp * self.prefill_tok_s
+        if self._tr is not None:
+            # engine-side spans within one tick are zero-width under
+            # the virtual clock (vtime advances *after* the step);
+            # this span carries the tick's true virtual duration
+            self._tr.span("tick", "engine", self.vtime,
+                          self.vtime + dt, pid=self._pid,
+                          args={"prefill_tokens": dp, "busy": n_busy})
+        self.vtime += dt
+        if self.on_step is not None:
+            self.on_step(self)
+        return True
+
+    def advance_to(self, t: float):
+        """Run whole engine ticks until the virtual clock reaches ``t``
+        (standalone-handle driver; the cluster drives ``step_once``
+        through its event heap instead)."""
+        while self.step_once(t):
+            pass
+        self.vtime = max(self.vtime, t)
 
     # ------------------------------------------------------------- probes
     def _load(self) -> dict:
@@ -298,11 +638,16 @@ class EngineHandle(ServerHandle):
 class Cluster:
     """Shared-virtual-clock harness over a list of ``EngineHandle``s.
 
-    ``submit`` routes a request to a server; ``advance_to`` moves every
-    engine to a common virtual time (arrival ordering is respected via the
-    per-handle pending heaps); ``drain`` runs all engines until every
-    submitted request finished or the timeout horizon passed; ``collect``
-    returns the measured per-request records.
+    ``submit`` routes a request (a typed ``ContinuumRequest``, or the
+    deprecated positional kwargs) to a server; ``advance_to`` moves the
+    fleet to a common virtual time by replaying engine ticks in global
+    event order off a min-heap of per-handle wake times — O(events on
+    *active* engines), so a 100-engine fleet with three busy servers
+    costs the same to advance as a 3-engine one; ``stream`` does the
+    same while yielding ``StreamEvent``s as tokens decode; ``drain``
+    runs all engines until every submitted request finished or the
+    timeout horizon passed; ``collect`` returns the measured
+    per-request records.
     """
 
     def __init__(self, handles: "list[EngineHandle]",
@@ -316,8 +661,23 @@ class Cluster:
         # dispatch (prefill where submitted, decode there); executed by
         # _on_engine_step as soon as the request reaches decode phase
         self._planned: dict[int, int] = {}
-        for h in handles:
+        # event heap of (wake_s, seq, handle_idx, entry_ver) — lazy
+        # deletion: entries are cheap to push, and an entry whose version
+        # no longer matches the handle's is stale and falls out on pop
+        self._heap: "list[tuple[float, int, int, int]]" = []
+        self._hseq = 0
+        # charged engine ticks / heap pops across the fleet — the
+        # O(active) scaling probe fig13 gates on
+        self.handle_steps = 0
+        self.heap_pops = 0
+        # StreamEvents buffered for Cluster.stream() (requests submitted
+        # with stream=True rather than a callback)
+        self._stream_buf: "deque[StreamEvent]" = deque()
+        for i, h in enumerate(handles):
+            h._cluster_idx = i
+            h._heap_ver = 0
             h.on_step = self._on_engine_step
+            h.on_enqueue = self._wake
         # default to the handles' shared telemetry so callers building via
         # build_continuum(telemetry=...) need not pass it twice
         if telemetry is None:
@@ -327,29 +687,62 @@ class Cluster:
         tr = telemetry.tracer if telemetry is not None else None
         self._tr = tr if (tr is not None and tr.enabled) else None
 
-    def submit(self, server: int, task: int, tokens, max_new_tokens: int,
-               t_arrival: float, quality_ok: bool = True, segments=None,
+    # ------------------------------------------------------------ intake
+    def submit(self, server=None, task=None, tokens=None,
+               max_new_tokens=None, t_arrival: float = 0.0,
+               quality_ok: bool = True, segments=None,
                media_delay_s: float = 0.0,
-               decode_server: int | None = None) -> int:
-        """Dispatch one task to ``server`` at virtual ``t_arrival``; the
-        request reaches the engine after the uplink delay.  ``quality_ok``
-        is the success-predictor verdict for (task, server) — generated
-        tokens are real but random, so answer quality is judged by the
-        predictor, as in the sim.
+               decode_server: "int | None" = None,
+               stream=None) -> int:
+        """Dispatch one request; returns its uid.
 
-        ``segments`` makes the request multimodal (typed spans,
-        repro/serving/segments.py; ``tokens`` is then ignored) and
-        ``media_delay_s`` charges the chosen split point's extra cost —
-        edge-side encode + media serialization from
-        ``EngineHandle.split_point`` — before the request reaches the
-        engine, so measured TTFT/e2e include where the media crossed the
-        continuum.
+        The typed form — ``submit(ContinuumRequest(...))`` — is the API:
+        the request carries prompt, arrival, media split, stream sink and
+        the router's plan annotations (``server`` must be set; route it
+        through ``QLMIORouter.plan`` or set it explicitly).  The request
+        reaches the engine after the uplink delay (+ ``media_delay_s``,
+        the chosen split point's edge-encode/serialization cost), so
+        measured TTFT/e2e include where the media crossed the continuum.
+        ``decode_server`` plans the disaggregated shape: prefill on
+        ``server``, then — as soon as the request reaches decode phase —
+        its KV snapshot migrates over the device link (charged on the
+        virtual clock, ``kv_migrate`` span) and decode resumes there.
+        ``quality_ok`` is the success-predictor verdict for (task,
+        server) — generated tokens are real but random, so answer quality
+        is judged by the predictor, as in the sim.
 
-        ``decode_server`` (None = run both phases on ``server``) plans the
-        disaggregated dispatch shape: prefill on ``server``, then — as
-        soon as the request reaches decode phase — its KV snapshot
-        migrates over the device link (charged on the virtual clock,
-        ``kv_migrate`` span) and decode resumes on ``decode_server``."""
+        ``stream`` (``ContinuumRequest.stream``): a callable receives a
+        ``StreamEvent`` per decoded token as it decodes (``t_user``
+        stamped with the streamed chunk's downlink); ``True`` buffers the
+        events for ``Cluster.stream()``.  Streamed requests pay one
+        chunk's downlink at the tail instead of the full payload —
+        earlier chunks overlap decoding.
+
+        The legacy positional/kwarg form (``submit(server, task, tokens,
+        max_new_tokens, t_arrival, ...)``) still works through a shim
+        that builds the ``ContinuumRequest`` and emits a
+        ``DeprecationWarning``."""
+        if isinstance(server, ContinuumRequest):
+            return self._submit_typed(server)
+        warnings.warn(
+            "Cluster.submit(server, task, tokens, ...) kwargs are "
+            "deprecated; pass a ContinuumRequest (repro.serving.request)",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_typed(ContinuumRequest(
+            tokens=tokens, segments=segments,
+            max_new_tokens=int(max_new_tokens), arrival_s=float(t_arrival),
+            task=int(task), quality_ok=bool(quality_ok),
+            media_delay_s=float(media_delay_s), stream=stream,
+            server=int(server), decode_server=decode_server))
+
+    def _submit_typed(self, creq: ContinuumRequest) -> int:
+        if creq.server is None:
+            raise ValueError(
+                "ContinuumRequest.server is unset — annotate the request "
+                "with a routing decision (QLMIORouter.plan(creq)) or set "
+                "server= explicitly")
+        server = int(creq.server)
+        decode_server = creq.decode_server
         h = self.handles[server]
         if decode_server is not None and decode_server != server:
             if not h.kv_compatible(self.handles[decode_server]):
@@ -358,46 +751,116 @@ class Cluster:
                     f"{self.handles[decode_server].name}: KV-incompatible "
                     "engines (geometry, page size, or cache backend)")
         self._uid += 1
-        if segments is not None:
-            req = Request(self._uid, segments=segments,
-                          max_new_tokens=int(max_new_tokens))
-        else:
-            req = Request(self._uid, np.asarray(tokens, np.int32),
-                          max_new_tokens=int(max_new_tokens))
+        uid = self._uid
+        req = h.engine.make_request(creq, uid=uid)
+        rec = {"uid": uid, "task": creq.task, "server": server,
+               "t_arrival": creq.arrival_s, "req": req,
+               "quality_ok": bool(creq.quality_ok),
+               "predicted_s": creq.predicted_s, "utility": creq.utility}
+        streamed = creq.stream is not None and creq.stream is not False
+        if streamed:
+            rec["streamed"] = True
+            user_cb = creq.stream if callable(creq.stream) else None
+
+            def deliver(ev: StreamEvent, _rec=rec, _user=user_cb):
+                # the *current* holder prices the chunk — a mid-stream
+                # migration moves the downlink to the resumed engine
+                hh = self.handles[_rec["server"]]
+                ev = dataclasses.replace(
+                    ev, t_user=ev.t_emit + hh.stream_chunk_s)
+                if _user is not None:
+                    _user(ev)
+                else:
+                    self._stream_buf.append(ev)
+
+            req.stream = deliver
+        self.records[uid] = rec
+        t_arrival, media_delay_s = creq.arrival_s, creq.media_delay_s
         h.enqueue(req, t_arrival + h.uplink_s() + media_delay_s)
         if self._tr is not None:
-            tr, pid, uid = self._tr, h._pid, self._uid
+            tr, pid = self._tr, h._pid
             t1 = t_arrival + h.uplink_s()
             tr.span("uplink", "transfer", t_arrival, t1, pid=pid, tid=uid,
-                    args={"task": int(task)})
+                    args={"task": int(creq.task)})
             if media_delay_s:
                 tr.span("media_encode", "transfer", t1,
                         t1 + media_delay_s, pid=pid, tid=uid)
-        self.records[self._uid] = {"uid": self._uid, "task": task,
-                                   "server": server, "t_arrival": t_arrival,
-                                   "req": req, "quality_ok": bool(quality_ok)}
         if decode_server is not None and decode_server != server:
-            self._planned[self._uid] = int(decode_server)
-        return self._uid
+            self._planned[uid] = int(decode_server)
+        return uid
 
-    # lockstep quantum: a migration fired while advancing one handle
-    # enqueues work onto a *peer* whose clock may already sit at the
-    # current barrier, so the admission lands late by at most one
-    # quantum.  Idle handles fast-forward, so finer sync is cheap.
-    SYNC_STEP_S = 0.1
-
+    # --------------------------------------------------- event-heap clock
     def busy(self) -> bool:
         return any(h.busy() or h.pending for h in self.handles)
 
+    def _wake(self, h: EngineHandle):
+        """(EngineHandle.on_enqueue) arm the handle's next wake time on
+        the event heap — an arrival or migration onto an idle handle
+        becomes a heap event so the event loop revisits it.  Each push
+        bumps the handle's entry version: at most one entry per handle is
+        *canonical*; superseded ones drop on pop without re-arming, so
+        heap traffic stays linear in (ticks + arrivals)."""
+        w = h.next_wake_s()
+        if w == math.inf:
+            return
+        h._heap_ver += 1
+        heapq.heappush(self._heap, (w, self._hseq, h._cluster_idx,
+                                    h._heap_ver))
+        self._hseq += 1
+
+    def _step_next(self, t: float) -> bool:
+        """Charge the single earliest pending engine tick strictly before
+        ``t``; returns False once no handle has an event before ``t``.
+        A migration fired inside the tick enqueues onto the peer handle,
+        which arms a fresh heap entry — so cross-engine causality holds
+        without a lockstep quantum."""
+        while self._heap:
+            w, _, idx, ver = self._heap[0]
+            if w >= t - 1e-9:
+                return False
+            heapq.heappop(self._heap)
+            self.heap_pops += 1
+            h = self.handles[idx]
+            if ver != h._heap_ver:
+                continue  # superseded by a newer arm for this handle
+            w2 = h.next_wake_s()
+            if w2 >= t - 1e-9 or w2 > w + 1e-9:
+                self._wake(h)  # re-arm at the corrected time (noop if inf)
+                continue
+            if h.step_once(t):
+                self.handle_steps += 1
+            self._wake(h)
+            return True
+        return False
+
     def advance_to(self, t: float, step_s: float | None = None):
+        """Advance the whole fleet to virtual time ``t`` in global event
+        order.  ``step_s`` is accepted for back-compat and ignored — the
+        event heap makes a sync quantum unnecessary."""
+        del step_s
         if t <= self.t:
             return
-        step = step_s if step_s is not None else self.SYNC_STEP_S
-        while self.t < t - 1e-9:
-            tt = min(self.t + step, t)
-            for h in self.handles:
-                h.advance_to(tt)
-            self.t = tt
+        while self._step_next(t):
+            pass
+        self.t = t
+
+    def stream(self, until: float):
+        """Advance the fleet to virtual time ``until``, yielding buffered
+        ``StreamEvent``s (requests submitted with ``stream=True``) in
+        emission order as engines decode them.  Events carry ``t_user``
+        — arrival at the user after the streamed chunk's downlink.
+        Requests with a ``stream`` *callback* are delivered inline
+        instead and do not appear here."""
+        if until > self.t:
+            while True:
+                progressed = self._step_next(until)
+                while self._stream_buf:
+                    yield self._stream_buf.popleft()
+                if not progressed:
+                    break
+            self.t = until
+        while self._stream_buf:
+            yield self._stream_buf.popleft()
 
     # ------------------------------------------------------- migration
     def _on_engine_step(self, h: EngineHandle):
@@ -524,24 +987,23 @@ class Cluster:
     def drain(self, max_virtual_s: float | None = None,
               step_s: float | None = None):
         """Advance every engine until idle (or the deadline, for failed /
-        wedged servers).  Idle engines fast-forward, so this is cheap.
-        Work still queued at the deadline — a failed server's requests, or
-        backlog beyond the timeout horizon — can never complete inside it,
-        so it is dropped here: ``collect()`` reports those requests as
-        timeouts and the cluster stays reusable (``reset()``-able).
-
-        Draining steps the fleet in ``step_s`` increments (default
-        ``SYNC_STEP_S``) rather than one full-horizon pass per handle: a
-        migration fired mid-drain enqueues work onto a *peer* handle at
-        the source's current vtime, and a handle already advanced to the
-        deadline would clear that work as a timeout without serving it."""
+        wedged servers) by replaying the event heap to the deadline — one
+        pass, no per-handle full-horizon sweep.  A migration fired
+        mid-drain enqueues onto a peer handle *as a heap event*, so the
+        peer serves it in the same pass at the right virtual time.  Work
+        still queued at the deadline — a failed server's requests, or
+        backlog beyond the timeout horizon — can never complete inside
+        it, so it is dropped here: ``collect()`` reports those requests
+        as timeouts and the cluster stays reusable (``reset()``-able).
+        ``step_s`` is accepted for back-compat and ignored."""
+        del step_s
         deadline = self.t + (2 * self.timeout_s if max_virtual_s is None
                              else max_virtual_s)
-        step = step_s if step_s is not None else self.SYNC_STEP_S
-        while self.t < deadline - 1e-9 and self.busy():
-            self.advance_to(min(self.t + step, deadline), step_s=step)
+        self.advance_to(deadline)
         for h in self.handles:
-            h.advance_to(deadline)
+            # timestamp the horizon on every handle (failed servers burn
+            # the time without serving) and drop unservable leftovers
+            h.vtime = max(h.vtime, deadline)
             h.pending.clear()
             h.engine.queue.clear()
         self.t = deadline
@@ -554,8 +1016,12 @@ class Cluster:
         for uid in sorted(self.records):
             rec = self.records[uid]
             req, h = rec["req"], self.handles[rec["server"]]
+            streamed = bool(rec.get("streamed"))
             if req.done and req.token_times:
-                down = h.downlink_s()
+                # a streamed request pays one token chunk's downlink at
+                # the tail (earlier chunks overlapped decoding); a drained
+                # one ships the full response payload at the end
+                down = h.stream_chunk_s if streamed else h.downlink_s()
                 e2e = req.token_times[-1] + down - rec["t_arrival"]
                 ttft = req.token_times[0] + down - rec["t_arrival"]
                 timeout = e2e > self.timeout_s
@@ -563,8 +1029,8 @@ class Cluster:
                 service = req.e2e_s()
                 if self._tr is not None and not rec.get("spanned"):
                     rec["spanned"] = True  # collect() may run twice
-                    self._tr.span("downlink", "transfer",
-                                  req.token_times[-1],
+                    self._tr.span("stream" if streamed else "downlink",
+                                  "transfer", req.token_times[-1],
                                   req.token_times[-1] + down,
                                   pid=h._pid, tid=uid)
                 if self.telemetry is not None:
@@ -578,7 +1044,9 @@ class Cluster:
                         "server": rec["server"], "ttft_s": float(ttft),
                         "e2e_s": float(e2e), "service_s": float(service),
                         "timeout": bool(timeout), "success": bool(success),
-                        "n_tokens": len(req.output)})
+                        "n_tokens": len(req.output),
+                        "streamed": streamed,
+                        "predicted_s": rec.get("predicted_s")})
         return out
 
     def reset(self):
@@ -601,6 +1069,10 @@ class Cluster:
         self.t = 0.0
         self.records = {}
         self._planned = {}
+        self._heap.clear()  # any surviving entries are stale by now
+        self._stream_buf.clear()
+        self.handle_steps = 0
+        self.heap_pops = 0
         self._uid = 0  # uids restart so replays compare bit-identically
 
     def latency_stats(self) -> dict:
@@ -681,6 +1153,9 @@ class EngineBackend:
                       and int(self.bench.score[task, c]) == 1)
         prompt = self.prompt_tokens(task, h.cfg.vocab)
         budget = self.gen_budget(task, server)
+        creq = ContinuumRequest(tokens=prompt, max_new_tokens=budget,
+                                arrival_s=self.t, task=task,
+                                quality_ok=quality_ok, server=server)
         tm = self.cluster.telemetry
         if tm is not None:
             # predict before submit: the queue term must not include the
@@ -690,17 +1165,13 @@ class EngineBackend:
             cand = [self.cluster.handles[s].predict_e2e_s(
                         len(prompt), self.gen_budget(task, s))[0]
                     for s in range(len(self.cluster.handles))]
-            uid = self.cluster.submit(
-                server, task, prompt, budget, t_arrival=self.t,
-                quality_ok=quality_ok)
+            uid = self.cluster.submit(creq.with_plan(predicted_s=predicted))
             tm.record_dispatch(task=task, server=server, t=self.t,
                                predicted_s=predicted, uid=uid, terms=terms,
                                candidates=cand, policy_est_s=float(lat_e))
             self._last_uid = uid
         else:
-            self._last_uid = self.cluster.submit(
-                server, task, prompt, budget, t_arrival=self.t,
-                quality_ok=quality_ok)
+            self._last_uid = self.cluster.submit(creq)
         self.t += self.arrival_dt
         self.cluster.advance_to(self.t)
         return lat_e, ok_e, False
@@ -721,7 +1192,7 @@ class EngineBackend:
 
 def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
                     fail=(), telemetry=None, arch: str | None = None,
-                    param_seed: int | None = None,
+                    param_seed: int | None = None, backend: str = "live",
                     **engine_kw) -> "list[EngineHandle]":
     """Live handles for a ``[(class_idx, count), ...]`` spec (the
     ``SYSTEM_CONFIGS`` layout) — pair with
@@ -736,7 +1207,12 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
     KV-compatible with identical weights, the precondition for
     bit-identical cross-engine migration (disaggregated prefill/decode;
     the per-class archs and per-handle seeds stay the default because
-    heterogeneous fleets exercise more of the replay harness)."""
+    heterogeneous fleets exercise more of the replay harness).
+
+    ``backend="sim"`` swaps every handle's live engine for the analytic
+    ``SimEngine`` — no weights, no XLA, same profiled tick costs — which
+    is what makes 100+ handle fleets (benchmarks/fig13_scaleout.py)
+    constructible in milliseconds."""
     handles = []
     i = 0
     for class_idx, count in spec:
@@ -749,6 +1225,7 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
                 f"{'cloud' if cloud else 'edge'}-{i} ({dev_name}/{arch_i})",
                 arch_i, cm.DEVICES[dev_name], cm.MODELS[prof_name],
                 is_cloud=cloud, seed=seed_i, fail=i in fail,
-                time_scale=time_scale, telemetry=telemetry, **engine_kw))
+                time_scale=time_scale, telemetry=telemetry,
+                backend=backend, **engine_kw))
             i += 1
     return handles

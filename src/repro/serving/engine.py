@@ -89,6 +89,7 @@ from repro.serving import segments as sg
 from repro.serving.kv_cache import (BlockPool, BlockTable, KVSnapshot,
                                     OutOfPagesError, ceil_blocks,
                                     full_blocks, kv_page_bytes)
+from repro.serving.request import ContinuumRequest, StreamEvent
 from repro.serving.telemetry import MetricsRegistry, latency_summary
 
 
@@ -144,6 +145,15 @@ class Request:
     # no prefill pass — resuming at exactly ``output[-1]``
     imported: "KVSnapshot | None" = dataclasses.field(default=None,
                                                       repr=False)
+    # per-token delivery callback (StreamEvent per decoded token, emitted
+    # inside step() as the token is sampled); None = drain-based only.
+    # Survives evacuate/resubmit, so a mid-stream migration keeps
+    # streaming to the same consumer with contiguous indices.
+    stream: "Callable[[StreamEvent], None] | None" = \
+        dataclasses.field(default=None, repr=False)
+    # admission-group id under the saxml batching knobs (None = admitted
+    # on the legacy unrestricted path); engine-internal
+    group: "int | None" = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         if self.segments is None:
@@ -187,6 +197,9 @@ class ServingEngine:
                  prefill_budget: int | None = None,
                  bucket_prompts: bool = True, min_bucket: int = 16,
                  return_logits: bool = False,
+                 sorted_batch_sizes: "list[int] | None" = None,
+                 max_live_batches: "int | None" = None,
+                 batching_wait_secs: float = 0.0,
                  clock: "Callable[[], float] | None" = None,
                  telemetry=None, trace_name: str = "engine"):
         """``prefill_chunk`` — tokens appended to the cache per chunked
@@ -213,6 +226,20 @@ class ServingEngine:
         and returns ``[B]`` token ids (one int32 per slot per tick over
         the host link); True restores the full ``[B, vocab]`` logits
         transfer for tests/inspection.
+
+        ``sorted_batch_sizes`` / ``max_live_batches`` /
+        ``batching_wait_secs`` — saxml-style admission batching (the
+        ``ServableMethod`` knobs).  None (default) keeps the legacy
+        per-request admission.  With a sorted list of allowed admission
+        batch sizes, queued requests are admitted in *groups*: as soon
+        as the queue can fill the largest bucket ``<= len(queue)``, that
+        many are admitted together; a partial group is only released
+        once the oldest queued request has waited ``batching_wait_secs``
+        on the engine clock (so admission delay is bounded), and is
+        padded *conceptually* to the smallest bucket ``>= count`` (the
+        group never exceeds its bucket).  ``max_live_batches`` caps how
+        many admitted groups may be in flight (prefilling or decoding)
+        at once; further admission holds until a group fully finishes.
 
         ``clock`` — time source for request timestamps (``t_submit`` /
         ``token_times``).  Default is ``time.perf_counter`` (wall clock); an
@@ -259,6 +286,25 @@ class ServingEngine:
                                else 2 * max(prefill_chunk, 1))
         self.min_bucket = min_bucket
         self.prefill_tasks: list[_PrefillTask | None] = [None] * max_batch
+        # ---- saxml-style admission batching (None = legacy per-request)
+        if sorted_batch_sizes is not None:
+            sizes = sorted(set(int(b) for b in sorted_batch_sizes))
+            if not sizes or sizes[0] < 1:
+                raise ValueError("sorted_batch_sizes needs sizes >= 1, got "
+                                 f"{sorted_batch_sizes!r}")
+            if sizes[-1] > max_batch:
+                raise ValueError(
+                    f"sorted_batch_sizes max {sizes[-1]} exceeds "
+                    f"max_batch={max_batch}")
+            sorted_batch_sizes = sizes
+        self.sorted_batch_sizes = sorted_batch_sizes
+        self.max_live_batches = max_live_batches
+        self.batching_wait_secs = float(batching_wait_secs)
+        self._group_left: dict[int, int] = {}  # group id -> unfinished
+        self._next_group = 0
+        self._admit_quota: "int | None" = None  # per-tick, set in step()
+        self._cur_group: "int | None" = None
+        self._admission_held = False  # tick ended with queue held back
         self._traced: set = set()  # distinct prefill-path trace shapes
         self._prefill = jax.jit(model.prefill)
         # ---- metrics registry: counters the hot paths increment directly
@@ -290,6 +336,11 @@ class ServingEngine:
         # (can slightly exceed 1.0: chunks are charged at bucket size);
         # observed only on ticks that did prefill work, telemetry only
         self._h_budget_util = m.histogram("prefill_budget_util")
+        # admission-group sizes under the saxml batching knobs, and the
+        # streamed-token counter (0 for drain-only workloads)
+        self._h_admit_size = m.histogram("batch_admit_size")
+        self._c_stream_tokens = m.counter("stream_tokens")
+        self._g_queue_depth = m.gauge("queue_depth")
         m.view("ticks", lambda: self.ticks)
         m.view("kv_cache_bytes", self.kv_cache_bytes)
         m.view("prefill_trace_count", self.prefill_trace_count)
@@ -340,6 +391,10 @@ class ServingEngine:
         self.ticks = 0
         self._progress = False
         self.finished: list[Request] = []
+        # engine-assigned uids for ContinuumRequest submissions (cluster
+        # submissions carry their own positive uids; legacy sync-execute
+        # requests use small negatives — this range collides with neither)
+        self._auto_uid = 1_000_000_000
 
     def _make_step(self, base_step):
         """Jit the per-tick decode step with the two per-tick-overhead
@@ -694,6 +749,7 @@ class ServingEngine:
         slot = self.slot_of_request(uid)
         req = self.slots[slot]
         req.imported = snap
+        self._release_group(req)  # it will not finish on this engine
         self._free_slot(slot)
         return req, snap
 
@@ -832,7 +888,8 @@ class ServingEngine:
             # in-flight prefill: a short prompt admitted behind a finished
             # one sees its freshly registered prefix blocks (the admission
             # lookup runs after the earlier prompt's chunks completed)
-            if not blocked and self.queue:
+            if (not blocked and self.queue
+                    and (self._admit_quota is None or self._admit_quota > 0)):
                 free = next((i for i in range(self.max_batch)
                              if self.slots[i] is None
                              and self.prefill_tasks[i] is None), None)
@@ -840,6 +897,9 @@ class ServingEngine:
                     req = self.queue.popleft()
                     if self._start_prefill(free, req):
                         progressed = True
+                        self._tag_group(req)
+                        if self._admit_quota is not None:
+                            self._admit_quota -= 1
                     else:
                         blocked = True
             for slot in range(self.max_batch):
@@ -856,6 +916,68 @@ class ServingEngine:
         if spent and self.telemetry is not None:
             self._h_budget_util.observe(spent / self.prefill_budget)
 
+    # ------------------------------------------- streaming + batched admission
+    def _emit_stream(self, req: Request, tok: int, t: float, final: bool):
+        """Deliver the token just appended to ``req.output``: a
+        ``first_token`` trace instant for the TTFT token, and — when the
+        request streams — one ``StreamEvent`` to its callback, as the
+        token is decoded rather than at drain."""
+        idx = len(req.output) - 1
+        if idx == 0 and self._tr is not None:
+            self._tr.instant("first_token", "lifecycle", t,
+                             pid=self._pid, tid=req.uid)
+        if req.stream is None:
+            return
+        self._c_stream_tokens.inc()
+        req.stream(StreamEvent(uid=req.uid, index=idx, token=tok, t_emit=t,
+                               first=idx == 0, final=final))
+
+    def _compute_admit_quota(self) -> "int | None":
+        """Queued requests that may start prefill this tick under the
+        saxml batching knobs (None = unlimited, legacy admission).  Sets
+        ``_admission_held`` when the knobs — not resource pressure — are
+        what is holding the queue back."""
+        self._admission_held = False
+        if self.sorted_batch_sizes is None:
+            return None
+        if not self.queue:
+            return 0
+        if (self.max_live_batches is not None
+                and len(self._group_left) >= self.max_live_batches):
+            self._admission_held = True
+            return 0
+        n = len(self.queue)
+        full = max((b for b in self.sorted_batch_sizes if b <= n), default=0)
+        if full:
+            return full  # fill the largest bucket the queue can cover
+        # partial group: released only once the oldest queued request has
+        # waited out batching_wait_secs on the engine clock; its bucket is
+        # the smallest allowed size >= n, so no group exceeds its bucket
+        if (self._now() - self.queue[0].t_submit
+                >= self.batching_wait_secs - 1e-12):
+            return n
+        self._admission_held = True
+        return 0
+
+    def _tag_group(self, req: Request):
+        """Book a just-admitted request into this tick's admission group
+        (live-batch accounting for ``max_live_batches``)."""
+        if self.sorted_batch_sizes is None:
+            return
+        if self._cur_group is None:
+            self._cur_group = self._next_group
+            self._next_group += 1
+            self._group_left[self._cur_group] = 0
+            self._cur_size = 0
+        req.group = self._cur_group
+        self._group_left[self._cur_group] += 1
+        self._cur_size += 1
+
+    def _close_admit_group(self):
+        if self._cur_group is not None:
+            self._h_admit_size.observe(self._cur_size)
+            self._cur_group = None
+
     # ------------------------------------------------------------- public
     def busy(self) -> bool:
         """Any work left: queued, mid-chunked-prefill, or decoding.  The
@@ -864,7 +986,27 @@ class ServingEngine:
         return bool(self.queue or any(s is not None for s in self.slots)
                     or any(t is not None for t in self.prefill_tasks))
 
-    def submit(self, req: Request):
+    def make_request(self, creq: ContinuumRequest,
+                     uid: "int | None" = None) -> Request:
+        """Materialize a typed ``ContinuumRequest`` as this engine's
+        internal ``Request`` (uid engine-assigned unless given; a bool
+        ``stream`` marker is a cluster-level buffering directive and
+        resolves to None here)."""
+        if uid is None:
+            self._auto_uid += 1
+            uid = self._auto_uid
+        tokens = (None if creq.tokens is None
+                  else np.asarray(creq.tokens, np.int32))
+        return Request(uid, tokens, max_new_tokens=int(creq.max_new_tokens),
+                       extra=creq.extra, segments=creq.segments,
+                       stream=creq.stream if callable(creq.stream) else None)
+
+    def submit(self, req: "Request | ContinuumRequest") -> Request:
+        """Queue a request; accepts the internal ``Request`` or the typed
+        ``ContinuumRequest`` (converted via ``make_request``).  Returns
+        the queued internal request."""
+        if isinstance(req, ContinuumRequest):
+            req = self.make_request(req)
         if req.tokens is None:
             raise ValueError(f"request {req.uid}: no tokens or segments")
         if req.features is not None:
@@ -919,6 +1061,7 @@ class ServingEngine:
             self._tr.instant("submit", "lifecycle", req.t_submit,
                              pid=self._pid, tid=req.uid)
         self.queue.append(req)
+        return req
 
     def _finish(self, req: Request):
         """Request complete: move to ``finished``, fold its latencies into
@@ -927,6 +1070,7 @@ class ServingEngine:
         req.done = True
         self.finished.append(req)
         self._c_finished.inc()
+        self._release_group(req)
         tt = req.token_times
         imported = req.imported is not None
         ta = req.t_admit if req.t_admit >= req.t_submit else req.t_submit
@@ -950,6 +1094,18 @@ class ServingEngine:
             tr.span("decode", "lifecycle", tt[0], tt[-1], pid=pid, tid=tid,
                     args={"new_tokens": len(req.output)})
 
+    def _release_group(self, req: Request):
+        """Retire a request from its admission group; a fully-retired
+        group frees a ``max_live_batches`` slot."""
+        if req.group is None:
+            return
+        left = self._group_left.get(req.group, 1) - 1
+        if left <= 0:
+            self._group_left.pop(req.group, None)
+        else:
+            self._group_left[req.group] = left
+        req.group = None
+
     def _activate(self, slot: int, req: Request, first_tok: int):
         """Install an admitted request into its decode slot, honoring EOS
         and the generation budget at admission: a request whose first
@@ -957,8 +1113,10 @@ class ServingEngine:
         finishes immediately instead of decoding its full budget."""
         req.output.append(first_tok)
         req.token_times.append(self._now())
-        if (req.max_new_tokens <= 1
-                or (self.eos_id is not None and first_tok == self.eos_id)):
+        ends = (req.max_new_tokens <= 1
+                or (self.eos_id is not None and first_tok == self.eos_id))
+        self._emit_stream(req, first_tok, req.token_times[-1], ends)
+        if ends:
             self._finish(req)
             if self.paged and self.block_tables[slot] is not None:
                 self.block_tables[slot].free()
@@ -975,9 +1133,14 @@ class ServingEngine:
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
+            if self._admit_quota is not None and self._admit_quota <= 0:
+                break  # this tick's admission group is full
             req = self.queue.popleft()
             if req.imported is not None:
                 if self._admit_imported(slot, req):
+                    self._tag_group(req)
+                    if self._admit_quota is not None:
+                        self._admit_quota -= 1
                     continue
                 self.queue.appendleft(req)
                 break  # out of pages: wait for running requests to finish
@@ -987,6 +1150,9 @@ class ServingEngine:
                 self.queue.appendleft(req)
                 break  # out of pages: wait for running requests to finish
             self._progress = True
+            self._tag_group(req)
+            if self._admit_quota is not None:
+                self._admit_quota -= 1
             self._activate(slot, req, first)
 
     def step(self) -> int:
@@ -1005,13 +1171,16 @@ class ServingEngine:
         driving styles compose (draining never depends on the global tick
         count accumulated by earlier external stepping)."""
         self._progress = False  # any admission/prefill advance this tick
+        self._admit_quota = self._compute_admit_quota()
         if self.chunked:
             self._schedule_prefill()
         else:
             self._admit()
+        self._close_admit_group()
+        self._g_queue_depth.set(len(self.queue))
         active = [i for i, r in enumerate(self.slots) if r is not None]
         n_prefilling = sum(t is not None for t in self.prefill_tasks)
-        if self._tr is not None and (active or n_prefilling):
+        if self._tr is not None and (active or n_prefilling or self.queue):
             self._sample_tick(len(active), n_prefilling)
         if not active:
             if n_prefilling:
@@ -1058,8 +1227,10 @@ class ServingEngine:
             req.token_times.append(t_now)
             self.pos[i] += 1
             self.budget[i] -= 1
-            if (self.budget[i] <= 0 or tok == self.eos_id
-                    or self.pos[i] >= self.max_seq - 1):
+            ends = bool(self.budget[i] <= 0 or tok == self.eos_id
+                        or self.pos[i] >= self.max_seq - 1)
+            self._emit_stream(req, tok, t_now, ends)
+            if ends:
                 self._finish(req)
                 self._free_slot(i)  # free slot/pages (continuous batching)
         return len(active) + n_prefilling
@@ -1070,6 +1241,9 @@ class ServingEngine:
         tr.counter("batch_occupancy", now,
                    {"decoding": n_active, "prefilling": n_prefilling},
                    pid=self._pid)
+        tr.counter("queue_depth", now,
+                   {"queued": len(self.queue),
+                    "live_batches": len(self._group_left)}, pid=self._pid)
         if self.paged:
             tr.counter("kv_pages", now,
                        {"in_use": self.pool.pages_in_use(),
@@ -1090,8 +1264,22 @@ class ServingEngine:
         tick counter and tripped immediately in that case.
         """
         drain_deadline = self.ticks + max_ticks
+        spins = 0  # ticks spent holding admission (batching knobs)
         while self.busy():
             if self.step() == 0 and self.queue and not self._progress:
+                if self._admission_held:
+                    # the batching knobs — not resource pressure — are
+                    # holding the queue: with a wall clock the wait simply
+                    # elapses; a virtual clock needs an external driver,
+                    # so spinning is bounded rather than diagnosed as OOM
+                    spins += 1
+                    if spins > max(max_ticks, 100_000):
+                        raise RuntimeError(
+                            "engine did not drain: admission held by the "
+                            "batching knobs but the clock never advanced "
+                            "(virtual-clock engines must be driven "
+                            "externally when batching_wait_secs > 0)")
+                    continue
                 # nothing active yet admission failed: the head request can
                 # never fit (its worst case exceeds the whole pool)
                 head = self.queue[0]
@@ -1156,10 +1344,13 @@ class ServingEngine:
         return out
 
     def latency_stats(self) -> dict:
-        """TTFT / inter-token / end-to-end latency percentiles (seconds) —
-        a thin view over the metrics registry's ``ttft_s``/``itl_s``/
-        ``e2e_s`` histograms, observed as each request finishes (so the
-        numbers survive ``run_until_drained`` popping ``self.finished``;
+        """TTFT / inter-token / end-to-end latency percentiles (seconds).
+
+        Alias for ``stats()["latency"]`` kept for callers that only want
+        the latency block without the full registry snapshot; both are
+        thin views over the registry's ``ttft_s``/``itl_s``/``e2e_s``
+        histograms, observed as each request finishes (so the numbers
+        survive ``run_until_drained`` popping ``self.finished``;
         accumulation is scoped by ``metrics.reset()``, which
         ``Cluster.reset`` calls between replays).  Timestamps come from
         the engine's ``clock``: wall seconds by default, **virtual-clock
@@ -1169,10 +1360,13 @@ class ServingEngine:
                                self._h_e2e.values)
 
     def stats(self) -> dict:
-        """Static engine configuration plus a full metrics-registry
-        snapshot (counters as ints, histograms as summary dicts, pool/
-        trace views evaluated live)."""
+        """The one-stop engine accessor: static configuration, a full
+        metrics-registry snapshot (counters as ints, histograms as
+        summary dicts, pool/trace views evaluated live), and the latency
+        percentiles under ``"latency"`` (the ``latency_stats()`` block —
+        that method remains as a documented alias)."""
         out = {"paged": self.paged, "kv_dtype": self.kv_dtype,
                "bucketed": self.bucketing, "chunked": self.chunked}
         out.update(self.metrics.snapshot())
+        out["latency"] = self.latency_stats()
         return out

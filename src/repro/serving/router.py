@@ -37,6 +37,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serving.request import ContinuumRequest
+
 logger = logging.getLogger(__name__)
 
 
@@ -246,18 +248,29 @@ class QLMIORouter:
                 float(self.health.dead_until[best]))
         return best
 
-    def plan(self, task: int) -> dict:
+    def plan(self, task: "int | ContinuumRequest"):
         """Price every dispatch *shape* and return the best: pure
         prefill-and-decode-here for each healthy server, plus — when
         ``migrate_pred`` is given — disaggregated prefill-on-A/
-        decode-on-B for every healthy, KV-compatible ordered pair (the
-        third shape the tentpole adds).  Returns ``{"server": decode
-        server, "prefill_server": prefill server or None (pure),
-        "utility": float}``; a disaggregated winner maps onto
+        decode-on-B for every healthy, KV-compatible ordered pair.
+
+        Given a task id, returns the legacy ``{"server": decode server,
+        "prefill_server": prefill server or None (pure), "utility",
+        "predicted_s"}`` dict; a disaggregated winner maps onto
         ``Cluster.submit(server=prefill_server, decode_server=server)``.
+
+        Given a typed ``ContinuumRequest`` (its ``task`` field names the
+        MIOBench task the predictors score), returns the request
+        *annotated* with the decision — ``with_plan(server=...,
+        decode_server=..., predicted_s=..., utility=...)`` — ready to
+        hand to ``Cluster.submit`` unchanged.
+
         The completion bonus is judged at the decode server — in a
         KV-compatible fleet both phases run the same model, so quality
         rides with whoever finishes the answer."""
+        creq = task if isinstance(task, ContinuumRequest) else None
+        if creq is not None:
+            task = int(creq.task)
         n = len(self.servers)
         t_eff = self._effective_latency(task)
         healthy = self.health.healthy(self.now)
@@ -286,13 +299,29 @@ class QLMIORouter:
                 "task %s: all %d servers unhealthy; plan falls back to "
                 "soonest-recovering server %d (%s)", task, n, best,
                 self.servers[best].name)
+            if creq is not None:
+                return creq.with_plan(server=best, decode_server=None,
+                                      predicted_s=float("inf"),
+                                      utility=float("-inf"))
             return {"server": best, "prefill_server": None,
-                    "utility": -np.inf}
+                    "utility": -np.inf, "predicted_s": float("inf")}
         norm = max(min(t for t, _, _ in shapes), 1e-6)
         utility = lambda e: -e[0] / norm + self.w * (3.0 * b_hat[e[1]] - 2.0)
         best = max(shapes, key=utility)
-        return {"server": best[1], "prefill_server": best[2],
-                "utility": float(utility(best))}
+        total, decode_s, prefill_s = best
+        if creq is not None:
+            # disaggregated shape: Cluster.submit prefills on ``server``
+            # and decodes on ``decode_server`` — map accordingly
+            if prefill_s is None:
+                return creq.with_plan(server=decode_s, decode_server=None,
+                                      predicted_s=float(total),
+                                      utility=float(utility(best)))
+            return creq.with_plan(server=prefill_s, decode_server=decode_s,
+                                  predicted_s=float(total),
+                                  utility=float(utility(best)))
+        return {"server": decode_s, "prefill_server": prefill_s,
+                "utility": float(utility(best)),
+                "predicted_s": float(total)}
 
     # -------------------------------------------------------------- dispatch
     def _drain_queues(self):

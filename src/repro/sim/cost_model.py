@@ -108,6 +108,25 @@ def downlink_s(nbytes, device: DeviceProfile):
     return uplink_s(nbytes, device)
 
 
+# one streamed token chunk on the wire: a few bytes of token id plus the
+# SSE/frame framing overhead every streaming protocol pays per event
+STREAM_CHUNK_BYTES = 256.0
+
+
+def stream_chunk_s(device: DeviceProfile,
+                   nbytes: float = STREAM_CHUNK_BYTES):
+    """Server->user link delay of ONE streamed token chunk.
+
+    Streaming replaces the single end-of-request response transfer with a
+    per-token trickle: each decoded token reaches the user
+    ``stream_chunk_s`` after it was sampled, so TTFT is measured at the
+    first *emitted* token + one chunk, not at drain + the full payload.
+    Chunks pipeline (the link is not serialized per chunk at these
+    sizes), so e2e pays this once — the last chunk's latency — rather
+    than ``n_tokens`` times."""
+    return downlink_s(nbytes, device)
+
+
 _PREFILL_MIN_BUCKET = 16  # mirrors ServingEngine's min_bucket default
 
 # ------------------------------------------------------- KV-cache roofline

@@ -13,6 +13,7 @@ from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving.cluster import Cluster, EngineBackend, build_continuum
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import ContinuumRequest
 from repro.serving.router import QLMIORouter
 from repro.sim.cemllm import Episode, make_servers_from_spec, run_policy
 from repro.sim.miobench import generate
@@ -76,8 +77,9 @@ def test_router_sees_real_queue_depth(world):
     _drained(cluster)
     h = cluster.handles[0]
     for i in range(4):
-        cluster.submit(0, task=i, tokens=np.arange(1, 9) % h.cfg.vocab,
-                       max_new_tokens=4, t_arrival=0.0)
+        cluster.submit(ContinuumRequest(
+            tokens=np.arange(1, 9) % h.cfg.vocab, max_new_tokens=4,
+            task=i, server=0))
     ld = h.load()
     assert ld["queue_depth"] == 4
     assert ld["inflight_prefill_tokens"] == 4 * 8
@@ -135,8 +137,9 @@ def test_failed_server_times_out_and_cluster_stays_reusable(world):
     h = cluster.handles[1]
     h.fail = True
     try:
-        cluster.submit(1, task=0, tokens=np.arange(1, 9) % h.cfg.vocab,
-                       max_new_tokens=4, t_arrival=0.0)
+        cluster.submit(ContinuumRequest(
+            tokens=np.arange(1, 9) % h.cfg.vocab, max_new_tokens=4,
+            task=0, server=1))
         cluster.drain()
         rec, = cluster.collect()
         assert rec["timeout"] and not rec["success"]

@@ -13,6 +13,7 @@ from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving.cluster import Cluster, build_continuum
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import ContinuumRequest
 from repro.serving.kv_cache import ceil_blocks, full_blocks
 from repro.serving.router import QLMIORouter, ServerHandle
 from repro.serving.telemetry import Telemetry
@@ -277,13 +278,15 @@ def test_cluster_charged_migration(twin_cluster):
     cl.reset()
     h0, h1 = cl.handles
     prompt = _prompt(h0.cfg, seed=11)
-    uid = cl.submit(0, 0, prompt, 10, t_arrival=0.0)
+    uid = cl.submit(ContinuumRequest(tokens=prompt, max_new_tokens=10,
+                                     task=0, server=0))
     cl.drain()
     pure = cl.collect()[0]
     base = tuple(cl.records[uid]["req"].output)
 
     cl.reset()
-    uid = cl.submit(0, 0, prompt, 10, t_arrival=0.0, decode_server=1)
+    uid = cl.submit(ContinuumRequest(tokens=prompt, max_new_tokens=10,
+                                     task=0, server=0, decode_server=1))
     cl.drain()
     rec = cl.collect()[0]
     req = cl.records[uid]["req"]
@@ -314,7 +317,8 @@ def test_cluster_rebalance_threshold(twin_cluster):
     h0 = cl.handles[0]
     prompt = _prompt(h0.cfg, seed=13)
     for k in range(6):  # pile everything onto handle 0
-        cl.submit(0, k, prompt, 10, t_arrival=0.0)
+        cl.submit(ContinuumRequest(tokens=prompt, max_new_tokens=10,
+                                   task=k, server=0))
     cl.advance_to(h0.uplink_s() + 6 * h0.decode_tick_s)
     assert h0._load()["backlog_s"] > 0
     assert cl.rebalance(threshold_s=1e9) == []  # nobody over threshold
@@ -374,12 +378,13 @@ def test_router_plan_falls_back_to_pure():
     r = _stub_router([1.0, 5.0], migrate=None)
     p = r.plan(0)
     assert p == {"server": 0, "prefill_server": None,
-                 "utility": pytest.approx(p["utility"])}
+                 "utility": pytest.approx(p["utility"]),
+                 "predicted_s": pytest.approx(p["predicted_s"])}
     r2 = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: None)
     assert r2.plan(0)["prefill_server"] is None
     r3 = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: 50.0)
-    assert r3.plan(0) == {"server": 0, "prefill_server": None,
-                          "utility": pytest.approx(r3.plan(0)["utility"])}
+    p3 = r3.plan(0)
+    assert (p3["server"], p3["prefill_server"]) == (0, None)
 
 
 def test_router_plan_skips_unhealthy():

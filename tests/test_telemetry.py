@@ -18,6 +18,7 @@ from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving.cluster import Cluster, build_continuum
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import ContinuumRequest
 from repro.serving.telemetry import (
     MetricsRegistry,
     Telemetry,
@@ -51,8 +52,9 @@ def _mixed_replay(cluster, n_tasks: int = 6):
         h = cluster.handles[s]
         toks = rng.integers(1, h.cfg.vocab, 6 + 4 * (i % 3)).astype(np.int32)
         predicted, terms = h.predict_e2e_s(len(toks), 4)
-        uid = cluster.submit(s, task=i, tokens=toks, max_new_tokens=4,
-                             t_arrival=t)
+        uid = cluster.submit(ContinuumRequest(
+            tokens=toks, max_new_tokens=4, arrival_s=t, task=i, server=s,
+            predicted_s=float(predicted)))
         if tm is not None:
             tm.record_dispatch(task=i, server=s, t=t, predicted_s=predicted,
                                uid=uid, terms=terms)
