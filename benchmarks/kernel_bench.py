@@ -149,6 +149,77 @@ def paged_kv_bench():
     })
 
 
+def speculative_bench():
+    """Multi-token verification vs k+1 sequential paged decode steps.
+
+    The verify kernel scores ``k`` drafted tokens plus the last accepted
+    token in one pass: the paged KV stream is read *once* for all k+1
+    query rows, where sequential decode re-reads it every step — so the
+    roofline tokens/s scales ~(k+1)x on the memory-bound side, in bf16
+    and (halved stream) fused-dequant int8.  What the decode loop
+    actually gains is acceptance-discounted: a tick emits
+    ``expected_accepted(k, a)`` tokens (cost_model), so the effective
+    ITL is swept over acceptance rates here.  Correctness: CPU-interpret
+    kernel vs the jnp gather oracle, finite + max-err reported per k."""
+    from repro.kernels.quant import quantize_kv
+    from repro.sim.cost_model import expected_accepted
+
+    B, H, Hkv, D = 1, 8, 2, 128
+    S2, bs_pg = 8192, 64
+    NB = S2 // bs_pg
+    rng = np.random.default_rng(7)
+    kp = jnp.asarray(rng.normal(size=(1 + NB, bs_pg, Hkv, D)), jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(1 + NB, bs_pg, Hkv, D)), jnp.bfloat16)
+    bt = jnp.arange(1, NB + 1, dtype=jnp.int32)[None]  # [1, NB]
+    kp8, kps = quantize_kv(kp)
+    vp8, vps = quantize_kv(vp)
+    layer = kv_token_bytes(1, Hkv, D, "bf16")
+    layer_i8 = kv_token_bytes(1, Hkv, D, "int8")
+    out = {"workload": f"B{B}xS{S2}xH{H}xbs{bs_pg}"}
+    print("speculative,k,seq_tok_s,verify_tok_s,speedup,verify_tok_s_int8,"
+          "max_err,max_err_int8")
+    for k in (2, 4, 8):
+        T = k + 1
+        # sequential: T decode passes, each streams the whole paged KV
+        seq_s = T * _roof(2 * 2 * H * S2 * D, B * S2 * layer)
+        seq_s_i8 = T * _roof(2 * 2 * H * S2 * D, B * S2 * layer_i8)
+        # verify: one pass, KV streamed once for all T query rows
+        ver_s = _roof(2 * 2 * H * T * S2 * D, B * S2 * layer)
+        ver_s_i8 = _roof(2 * 2 * H * T * S2 * D, B * S2 * layer_i8)
+        # correctness on a prefix+draft layout: drafts occupy the last T
+        # positions of the sequence, queries attend causally over both
+        pos = jnp.full((B,), S2 - T, jnp.int32)
+        q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.bfloat16)
+        o = ops.paged_verify(q, kp, vp, bt, pos)
+        err = float(jnp.max(jnp.abs(
+            o.astype(jnp.float32)
+            - ref.paged_verify_ref(q, kp, vp, bt, pos)
+            .astype(jnp.float32))))
+        o8 = ops.paged_verify_quant(q, kp8, vp8, kps, vps, bt, pos)
+        err8 = float(jnp.max(jnp.abs(
+            o8.astype(jnp.float32)
+            - ref.paged_verify_quant_ref(q, kp8, vp8, kps, vps, bt, pos)
+            .astype(jnp.float32))))
+        out[f"k{k}"] = {
+            "seq_tok_s": T / seq_s, "verify_tok_s": T / ver_s,
+            "verify_speedup": seq_s / ver_s,
+            "seq_tok_s_int8": T / seq_s_i8,
+            "verify_tok_s_int8": T / ver_s_i8,
+            "verify_speedup_int8": seq_s_i8 / ver_s_i8,
+            "max_err": err, "max_err_int8": err8,
+            # acceptance-swept effective ITL: one verify tick emits
+            # expected_accepted(k, a) tokens on average
+            "effective_itl_us": {
+                f"a{a:.1f}": ver_s / float(expected_accepted(k, a)) * 1e6
+                for a in (0.3, 0.5, 0.7, 0.9)},
+        }
+        r = out[f"k{k}"]
+        print(f"speculative,{k},{r['seq_tok_s']:.0f},"
+              f"{r['verify_tok_s']:.0f},{r['verify_speedup']:.2f},"
+              f"{r['verify_tok_s_int8']:.0f},{err:.2e},{err8:.2e}")
+    return emit("speculative_verify", out)
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
@@ -220,6 +291,7 @@ def run():
                  _roof(flops, byts_i8), time.time() - t0))
 
     paged = paged_kv_bench()
+    spec = speculative_bench()
 
     # SSD scan
     b2, S3, h2, p2, n2 = 1, 1024, 8, 64, 64
@@ -273,7 +345,7 @@ def run():
     return {"kernels": {n: {"workload": w, "err": e,
                             "tpu_roofline_us": r_ * 1e6, "cpu_wall_s": wl}
                         for n, w, e, r_, wl in rows},
-            "paged_kv": paged, "serving": serving}
+            "paged_kv": paged, "speculative": spec, "serving": serving}
 
 
 def _flag_value(args: "list[str]", flag: str) -> "str | None":
@@ -297,10 +369,12 @@ def main(argv: "list[str]") -> dict:
     json_path = _flag_value(args, "--json")
     profile_dir = _flag_value(args, "--profile")
     sections = [a for a in args if not a.startswith("-")]
-    unknown = [s for s in sections if s not in ("serving", "paged_kv")]
+    unknown = [s for s in sections
+               if s not in ("serving", "paged_kv", "speculative")]
     if unknown:
         raise SystemExit(f"kernel_bench: unknown section(s) {unknown}; "
-                         "available: serving, paged_kv (none = full sweep)")
+                         "available: serving, paged_kv, speculative "
+                         "(none = full sweep)")
     out = {}
     with contextlib.ExitStack() as stack:
         if profile_dir is not None:
@@ -311,6 +385,8 @@ def main(argv: "list[str]") -> dict:
                 print(f"kernel_bench: --profile disabled ({e})")
         if "paged_kv" in sections:
             out["paged_kv"] = paged_kv_bench()
+        if "speculative" in sections:
+            out["speculative"] = speculative_bench()
         if "serving" in sections:
             out["serving"] = serving_prefill_bench()
         if not sections:

@@ -27,12 +27,14 @@ python -m pytest -x -q
 python scripts/smoke_decode.py
 
 # serving prefill smoke: TTFT/ITL p95, prefill trace counts, paged-decode
-# throughput and the int8-KV sections (paged_kv.int8 bytes/token +
-# throughput, serving.chunked_int8 run); gated below together with the
-# fig10 cost-model metric, and uploaded as a CI artifact
+# throughput, the int8-KV sections (paged_kv.int8 bytes/token +
+# throughput, serving.chunked_int8 run) and the speculative multi-token-
+# verify rows (verify vs sequential tokens/s at k in {2,4,8}, bf16+int8,
+# kernel-vs-oracle error); gated below together with the fig10
+# cost-model metric, and uploaded as a CI artifact
 mkdir -p results
 PYTHONPATH=".:${PYTHONPATH}" python benchmarks/kernel_bench.py \
-    serving paged_kv --json results/bench.json
+    serving paged_kv speculative --json results/bench.json
 
 # continuum replay smoke with tracing: QLMIO over real ServingEngines must
 # beat the all-cloud baseline on mean e2e latency at a matching completion
@@ -52,6 +54,15 @@ PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig12_disaggregation.py \
     --smoke --trace results/fig12_trace.json
 python scripts/trace_report.py results/fig12_trace.json
 
+# speculative decoding smoke with tracing: QLMIO extended with the
+# fourth dispatch shape (edge drafts / cloud verifies, plus colocated
+# cloud speculation) must beat all-cloud on measured mean ITL at an
+# equal-or-better completion rate, with live acceptance telemetry
+# (spec_tokens counters + draft/verify spans) in the exported trace
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig14_speculative.py \
+    --smoke --trace results/fig14_trace.json
+python scripts/trace_report.py results/fig14_trace.json
+
 # 100-engine scale-out smoke with tracing: 10k Poisson-arrival requests
 # replayed over 100 sim-backend engines on the event-heap clock; asserts
 # the O(active) property (identical trace -> identical handle-step count
@@ -65,11 +76,12 @@ python scripts/trace_report.py results/fig13_trace.json
 # benchmark regression gate: kernel/serving numbers + the fig10 replay's
 # cost_model.mean_abs_pct_err + the fig12 migration headline metrics +
 # the fig13 scale-out headline metrics (incl. the deterministic
-# fig13.oactive_steps_large O(active) gate), all vs.
+# fig13.oactive_steps_large O(active) gate) + the fig14 speculative
+# headline metrics (measured ITL reduction, live acceptance), all vs.
 # benchmarks/baseline.json
 python scripts/check_bench.py results/bench.json \
     results/fig10_continuum_replay.json results/fig12_disaggregation.json \
-    results/fig13_scaleout.json
+    results/fig13_scaleout.json results/fig14_speculative.json
 
 # multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
 # ship vs edge-encode) must beat both fixed policies on mean e2e latency

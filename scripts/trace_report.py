@@ -146,6 +146,42 @@ def migration_traffic(trace: dict) -> "dict[str, dict]":
     return dict(traffic)
 
 
+def speculation(trace: dict, buckets: int = 20) -> "list[dict]":
+    """Per-engine speculative-decoding rollup from the ``spec_tokens``
+    counter samples each speculative engine emits per tick: drafted /
+    accepted / wasted token totals, the overall acceptance rate, and a
+    coarse acceptance-rate timeline (accepted/drafted per time bucket).
+    Empty for traces without speculative engines."""
+    names = process_names(trace)
+    samples: dict = defaultdict(list)
+    horizon = 0.0
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "C" and ev["name"] == "spec_tokens":
+            a = ev.get("args", {})
+            t = ev["ts"] / _US
+            horizon = max(horizon, t)
+            samples[ev["pid"]].append((t, int(a.get("drafted", 0)),
+                                       int(a.get("accepted", 0)),
+                                       int(a.get("emitted", 0))))
+    out = []
+    for pid in sorted(samples):
+        ss = samples[pid]
+        drafted = sum(s[1] for s in ss)
+        accepted = sum(s[2] for s in ss)
+        emitted = sum(s[3] for s in ss)
+        dr, ac = np.zeros(buckets), np.zeros(buckets)
+        for t, d, a, _ in ss:
+            b = min(int(t / (horizon or 1.0) * buckets), buckets - 1)
+            dr[b] += d
+            ac[b] += a
+        out.append({"engine": names.get(pid, f"pid{pid}"),
+                    "drafted": drafted, "accepted": accepted,
+                    "wasted": drafted - accepted, "emitted": emitted,
+                    "acceptance": accepted / drafted if drafted else 0.0,
+                    "timeline": np.divide(ac, np.maximum(dr, 1))})
+    return out
+
+
 def slow_requests(trace: dict, top: int = 5) -> "list[dict]":
     """Top-N slowest requests by summed lifecycle+transfer span time on
     their (engine, request-uid) thread."""
@@ -214,6 +250,25 @@ def report(trace: dict, top: int = 5) -> str:
             lines.append(f"{name:<36} in {t['in_bytes']:>9} B "
                          f"({t['in_pages']} pages, {t['moves']} moves)  "
                          f"out {t['out_bytes']:>9} B")
+
+    spec = speculation(trace)
+    if spec:
+        lines.append("")
+        lines.append("== speculative decoding (drafted / accepted / wasted "
+                     "tokens, acceptance timeline) ==")
+        for sp in spec:
+            lines.append(
+                f"{sp['engine']:<36}drafted {sp['drafted']:>6}  "
+                f"accepted {sp['accepted']:>6}  wasted {sp['wasted']:>6}  "
+                f"rate {sp['acceptance']:.3f}  [{_bar(sp['timeline'])}]")
+        # join the draft/verify engine spans into the same p50/p95 view
+        # as the rest of the stage decomposition
+        for s in stages:
+            if s["name"] in ("draft_tick", "verify_tick"):
+                lines.append(f"{s['cat'] + '/' + s['name']:<36}"
+                             f"n={s['count']:<6} p50={s['p50_s']:.4f}s  "
+                             f"p95={s['p95_s']:.4f}s  "
+                             f"total={s['total_s']:.2f}s")
 
     slow = slow_requests(trace, top)
     lines.append("")

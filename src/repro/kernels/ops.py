@@ -15,6 +15,8 @@ from repro.kernels.mamba2_scan import ssd_scan_tpu
 from repro.kernels.moe_gmm import grouped_matmul_tpu
 from repro.kernels.paged_decode import paged_decode_quant_tpu
 from repro.kernels.paged_decode import paged_decode_tpu
+from repro.kernels.paged_verify import paged_verify_quant_tpu
+from repro.kernels.paged_verify import paged_verify_tpu
 from repro.kernels.rmsnorm import rmsnorm_tpu
 
 
@@ -48,6 +50,18 @@ def paged_decode_quant(q, k_pages, v_pages, k_scales, v_scales,
                        block_tables, pos, **kw):
     kw.setdefault("interpret", _interpret())
     return paged_decode_quant_tpu(q, k_pages, v_pages, k_scales, v_scales,
+                                  block_tables, pos, **kw)
+
+
+def paged_verify(q, k_pages, v_pages, block_tables, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return paged_verify_tpu(q, k_pages, v_pages, block_tables, pos, **kw)
+
+
+def paged_verify_quant(q, k_pages, v_pages, k_scales, v_scales,
+                       block_tables, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return paged_verify_quant_tpu(q, k_pages, v_pages, k_scales, v_scales,
                                   block_tables, pos, **kw)
 
 

@@ -10,6 +10,10 @@ from repro.models.attention import paged_decode_attention as _paged_ref
 from repro.models.attention import (
     paged_decode_attention_quant as _paged_q_ref,
 )
+from repro.models.attention import paged_verify_attention as _verify_ref
+from repro.models.attention import (
+    paged_verify_attention_quant as _verify_q_ref,
+)
 from repro.models.attention import reference_attention
 
 
@@ -40,6 +44,20 @@ def paged_decode_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
     the quantized engine's CPU fallback)."""
     return _paged_q_ref(q, k_pages, v_pages, k_scales, v_scales,
                         block_tables, pos, window=window)
+
+
+def paged_verify_ref(q, k_pages, v_pages, block_tables, pos, *, window=0):
+    """Gather-through-block-table multi-token verify oracle (and the
+    speculative engine's CPU fallback)."""
+    return _verify_ref(q, k_pages, v_pages, block_tables, pos, window=window)
+
+
+def paged_verify_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                           block_tables, pos, *, window=0):
+    """Dequantize-then-gather oracle for the fused int8 multi-token
+    verify (and the quantized speculative engine's CPU fallback)."""
+    return _verify_q_ref(q, k_pages, v_pages, k_scales, v_scales,
+                         block_tables, pos, window=window)
 
 
 def ssd_scan_ref(x, dt, a_neg, B, C):

@@ -31,13 +31,16 @@ from repro.models import lm
 from repro.models import mamba2 as m2
 from repro.models import xlstm as xl
 from repro.kernels.paged_decode import paged_decode_quant_tpu, paged_decode_tpu
+from repro.kernels.paged_verify import paged_verify_quant_tpu, paged_verify_tpu
 from repro.kernels.quant import dequantize_kv, quantize_kv
 from repro.models.attention import (chunk_prefill_attention, decode_attention,
                                     flash_attention,
                                     paged_chunk_prefill_attention,
                                     paged_chunk_prefill_attention_quant,
                                     paged_decode_attention,
-                                    paged_decode_attention_quant)
+                                    paged_decode_attention_quant,
+                                    paged_verify_attention,
+                                    paged_verify_attention_quant)
 from repro.nn.layers import apply_rope
 from repro.nn.spec import abstract_params, init_params
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -580,6 +583,85 @@ class Model:
             attend)
         x = lm._norm(params, x, cfg.norm, "final")
         logits = lm.last_logits(cfg, params, x)
+        return logits, dict(zip(names, kv_new))
+
+    def verify_step_paged(self, params, cache, batch):
+        """Score T candidate tokens per slot in one pass (speculative
+        verify) against the paged KV cache.
+
+        cache  = the same bf16 or int8 paged pool ``serve_step_paged``
+                 takes; batch = {tokens [B, T], pos [B], block_tables
+                 [B, NB] int32}.  ``tokens[:, 0]`` is the last *accepted*
+                 token (the one plain decode would feed next) and
+                 ``tokens[:, 1:]`` the draft model's k = T-1 candidates;
+                 ``pos[b]`` is the position ``tokens[b, 0]`` lands at.
+
+        Write-then-attend, exactly like ``prefill_chunk_paged`` but
+        batched over slots: every token's K/V is scattered into page
+        ``tables[b, (pos+t)//bs]`` (rows whose block index runs past the
+        table, e.g. inactive slots parked at ``pos = max_seq``, drop via
+        out-of-bounds page ids), then the T queries attend causally over
+        prefix + drafts through the multi-token verify kernel
+        (``kernels/paged_verify.py``; XLA gather fallback off-TPU).
+        Returns (logits [B, T, V], cache): ``argmax(logits[:, t])`` is
+        the target model's next token *given* tokens[:, :t+1] — the
+        greedy accept rule compares it to the next draft, so accepted
+        prefixes are bit-identical to sequential ``serve_step_paged``
+        calls.  Rejected positions keep their scattered K/V; they sit
+        past the accepted position, are masked by every causal read, and
+        are overwritten when decoding actually reaches them — rollback
+        is positional, not physical (the engine's decode pages are
+        private, ref == 1).
+        """
+        cfg = self.cfg
+        tokens, pos = batch["tokens"], batch["pos"]
+        tables = batch["block_tables"]
+        B, T = tokens.shape
+        P, bs = cache["k_pages"].shape[1:3]
+        NB = tables.shape[1]
+        quant = "k_scales" in cache
+        x = lm.embed_tokens(cfg, params, tokens)  # [B, T, d]
+        positions = (pos[:, None] + jnp.arange(T)[None, :]).astype(jnp.int32)
+        blk = positions // bs
+        page = tables[jnp.arange(B)[:, None], jnp.clip(blk, 0, NB - 1)]
+        wpage = jnp.where((page >= 0) & (blk < NB), page, P)  # OOB -> dropped
+        off = positions % bs
+        use_kernel = jax.default_backend() == "tpu"
+
+        def attend(q, k, v, kv, window):
+            if quant:
+                kp, vp, ksc, vsc = kv
+                k8, k1s = quantize_kv(k)  # [B,T,Hkv,D] -> int8 + [B,T,Hkv]
+                v8, v1s = quantize_kv(v)
+                kp = kp.at[wpage, off].set(k8)
+                vp = vp.at[wpage, off].set(v8)
+                ksc = ksc.at[wpage, off].set(k1s)
+                vsc = vsc.at[wpage, off].set(v1s)
+                if use_kernel:
+                    o = paged_verify_quant_tpu(q, kp, vp, ksc, vsc, tables,
+                                               pos, window=window)
+                else:
+                    o = paged_verify_attention_quant(q, kp, vp, ksc, vsc,
+                                                     tables, pos,
+                                                     window=window)
+                return o, (kp, vp, ksc, vsc)
+            kp, vp = kv
+            kp = kp.at[wpage, off].set(k.astype(kp.dtype))
+            vp = vp.at[wpage, off].set(v.astype(vp.dtype))
+            if use_kernel:
+                o = paged_verify_tpu(q, kp, vp, tables, pos, window=window)
+            else:
+                o = paged_verify_attention(q, kp, vp, tables, pos,
+                                           window=window)
+            return o, (kp, vp)
+
+        names = (("k_pages", "v_pages", "k_scales", "v_scales") if quant
+                 else ("k_pages", "v_pages"))
+        x, kv_new = self._attn_decode_scan(
+            params, x, positions, tuple(cache[n] for n in names), NB * bs,
+            attend, layer_fn=self._chunk_layer)
+        x = lm._norm(params, x, cfg.norm, "final")
+        logits = lm.last_logits(cfg, params, x)  # [B, T, V]
         return logits, dict(zip(names, kv_new))
 
     # ------------------------------------------------------- chunked prefill

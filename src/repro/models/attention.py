@@ -360,6 +360,42 @@ def paged_chunk_prefill_attention(q, k_pages, v_pages, block_tables, qpos, *,
                                    softcap=softcap)
 
 
+def paged_verify_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           window: int = 0, scale: float | None = None,
+                           softcap: float = 0.0):
+    """Multi-token verify attention against a paged KV cache (one layer).
+
+    q [B, T, H, D] — the T candidate-token queries of a speculative
+    verify pass; k_pages/v_pages [P, bs, Hkv, D]; block_tables [B, NB]
+    int32 (-1 = unallocated); pos [B] the logical position of each
+    sequence's *first* query token.  Query t sits at position
+    ``pos + t`` and attends causally over prefix + drafts — exactly the
+    attention a sequential decode of the same tokens would see.  The
+    drafts' K/V must already be scattered into their pages
+    (write-then-attend).  XLA fallback / oracle for
+    ``repro/kernels/paged_verify.paged_verify_tpu``.
+    """
+    T = q.shape[1]
+    qpos = pos[:, None] + jnp.arange(T)[None, :]  # [B, T]
+    return paged_chunk_prefill_attention(q, k_pages, v_pages, block_tables,
+                                         qpos, window=window, scale=scale,
+                                         softcap=softcap)
+
+
+def paged_verify_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_tables, pos, *, window: int = 0,
+                                 scale: float | None = None,
+                                 softcap: float = 0.0):
+    """``paged_verify_attention`` over an int8 page pool: dequantize the
+    pool (the drafts' just-scattered rows included) and delegate — the
+    oracle computes the same values the fused kernel dequantizes
+    in-registers."""
+    from repro.kernels.quant import dequantize_kv
+    return paged_verify_attention(
+        q, dequantize_kv(k_pages, k_scales), dequantize_kv(v_pages, v_scales),
+        block_tables, pos, window=window, scale=scale, softcap=softcap)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
                            window: int = 0, scale: float | None = None,
                            softcap: float = 0.0):

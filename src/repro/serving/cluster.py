@@ -378,11 +378,34 @@ class EngineHandle(ServerHandle):
                  seed: int = 0, max_batch: int = 2, max_seq: int = 96,
                  time_scale: float = 1.0, payload_bytes: float | None = None,
                  kv_dtype: str | None = None, fail: bool = False,
+                 draft_profile: "cm.ModelProfile | None" = None,
+                 draft_device: "cm.DeviceProfile | None" = None,
+                 spec_k: int = 3,
                  telemetry=None, backend: str = "live", **engine_kw):
+        """``draft_profile`` turns on speculative decoding for this
+        handle: the live engine drafts with a small same-arch model and
+        verifies with the paged multi-token kernel, while the virtual
+        clock charges ``cost_model.speculative_tick_s`` — ``spec_k``
+        draft steps priced as ``draft_profile`` on ``draft_device``
+        (None = colocated on this handle's device; an edge device here
+        is the edge-drafts/cloud-verifies offloading shape, where only
+        token ids ride the uplink) plus one multi-token verify pass of
+        this handle's own profile.  Live backend only."""
         cfg = reduced(get_config(arch))
         self.cfg = cfg
         self.backend = backend
         self.vtime = 0.0
+        self.time_scale = time_scale
+        self.draft_profile = draft_profile
+        self.draft_device = draft_device if draft_device is not None \
+            else device
+        if draft_profile is not None:
+            if backend != "live":
+                raise ValueError(
+                    "speculative decoding (draft_profile=...) needs the "
+                    "live engine backend")
+            engine_kw.setdefault("draft_config", cfg)
+            engine_kw.setdefault("spec_k", spec_k)
         # KV precision is itself an offloading decision: edge tiers
         # default to the int8 page pool (half the decode KV stream, ~2x
         # the page budget per HBM byte — what makes the weak tiers worth
@@ -410,6 +433,12 @@ class EngineHandle(ServerHandle):
                 kv_dtype = ("int8" if model.supports_paged and not is_cloud
                             else "bf16")
             self.kv_dtype = kv_dtype
+            if draft_profile is not None:
+                # default draft weights = the target's own (the reduced
+                # live config is the "small" model already); acceptance
+                # is whatever the two numerical paths agree on, and the
+                # emitted stream is bit-identical regardless
+                engine_kw.setdefault("draft_params", params)
             self.engine = ServingEngine(model, params, max_batch=max_batch,
                                         max_seq=max_seq, kv_dtype=kv_dtype,
                                         clock=lambda: self.vtime,
@@ -433,6 +462,20 @@ class EngineHandle(ServerHandle):
                                             * profile.bytes_per_param
                                             + kv_stream) / bw)
         self.prefill_tok_s = time_scale * 2.0 * profile.n_active / eff
+        # speculative handles charge the spec tick (k drafts priced as
+        # draft_profile on draft_device + one multi-token verify here)
+        # instead of the plain decode tick; each tick then emits 1..k+1
+        # tokens, which is where the effective-ITL win comes from
+        self.spec_k = spec_k
+        if draft_profile is not None:
+            self.spec_tick_s = float(time_scale * cm.speculative_tick_s(
+                device, profile, draft_profile, spec_k,
+                context_tokens=max_seq / 2, kv_dtype=kv_dtype,
+                draft_device=self.draft_device))
+            self._tick_s = self.spec_tick_s
+        else:
+            self.spec_tick_s = None
+            self._tick_s = self.decode_tick_s
         # payload (default: the cost model's text+image request) split
         # evenly between request and response; both halves priced by the
         # shared cost-model link helper
@@ -554,7 +597,7 @@ class EngineHandle(ServerHandle):
         p0 = e.prefill_tokens_computed + e.prefill_tokens_padded
         n_busy = e.step()
         dp = e.prefill_tokens_computed + e.prefill_tokens_padded - p0
-        dt = self.decode_tick_s + dp * self.prefill_tok_s
+        dt = self._tick_s + dp * self.prefill_tok_s
         if self._tr is not None:
             # engine-side spans within one tick are zero-width under
             # the virtual clock (vtime advances *after* the step);
@@ -576,6 +619,17 @@ class EngineHandle(ServerHandle):
         self.vtime = max(self.vtime, t)
 
     # ------------------------------------------------------------- probes
+    def itl_s(self) -> float:
+        """Effective virtual seconds per emitted token: the plain decode
+        tick, or — for a speculative handle — the spec tick amortized
+        over the expected accepted prefix at the engine's *live measured*
+        acceptance rate (telemetry feeding back into prediction)."""
+        if self.spec_tick_s is None:
+            return self.decode_tick_s
+        k = getattr(self.engine, "spec_k", self.spec_k)
+        a = self.engine.acceptance_rate()
+        return float(self.spec_tick_s / cm.expected_accepted(k, a))
+
     def _load(self) -> dict:
         """Live congestion for the router's ``_effective_latency``: queued
         + running request count, prompt tokens not yet in any KV cache,
@@ -591,7 +645,7 @@ class EngineHandle(ServerHandle):
         decode_ticks += -(-sum(r.max_new_tokens for r in waiting)
                           // max(e.max_batch, 1))
         backlog = (inflight * self.prefill_tok_s
-                   + decode_ticks * self.decode_tick_s)
+                   + decode_ticks * self.itl_s())
         return {"queue_depth": len(waiting) + len(active) + len(tasks),
                 "inflight_prefill_tokens": int(inflight),
                 "backlog_s": float(backlog)}
@@ -613,7 +667,7 @@ class EngineHandle(ServerHandle):
             minimum=e.min_bucket if e.bucketing else 1))
         terms = {"queue": queue,
                  "prefill": n_pref * self.prefill_tok_s,
-                 "decode": max_new_tokens * self.decode_tick_s,
+                 "decode": max_new_tokens * self.itl_s(),
                  "media": float(media_delay_s),
                  "link": self.up_s + self.down_s}
         return sum(terms.values()), terms
@@ -750,12 +804,22 @@ class Cluster:
                     f"cannot plan prefill on {h.name} / decode on "
                     f"{self.handles[decode_server].name}: KV-incompatible "
                     "engines (geometry, page size, or cache backend)")
+        if creq.draft_server is not None:
+            hv = self.handles[decode_server if decode_server is not None
+                              else server]
+            if hv.spec_tick_s is None:
+                raise ValueError(
+                    f"cannot plan drafts on "
+                    f"{self.handles[creq.draft_server].name} for "
+                    f"{hv.name}: the verify handle is not speculative "
+                    "(build it with draft_profile=...)")
         self._uid += 1
         uid = self._uid
         req = h.engine.make_request(creq, uid=uid)
         rec = {"uid": uid, "task": creq.task, "server": server,
                "t_arrival": creq.arrival_s, "req": req,
                "quality_ok": bool(creq.quality_ok),
+               "draft_server": creq.draft_server,
                "predicted_s": creq.predicted_s, "utility": creq.utility}
         streamed = creq.stream is not None and creq.stream is not False
         if streamed:
@@ -945,13 +1009,13 @@ class Cluster:
                 mig = float(cm.migrate_link_s(
                     pages * dst_h.engine.page_bytes(),
                     src_h.device, dst_h.device))
-                t_move = (mig + remaining * dst_h.decode_tick_s
+                t_move = (mig + remaining * dst_h.itl_s()
                           + 0.5 * loads[j])
                 if best is None or t_move < best[0]:
                     best = (t_move, j)
             if best is None:
                 continue
-            t_stay = remaining * src_h.decode_tick_s + 0.5 * loads[i]
+            t_stay = remaining * src_h.itl_s() + 0.5 * loads[i]
             if t_stay - best[0] > min_gain_s:
                 self._planned.pop(uid, None)  # superseded by this move
                 moves.append(self.migrate(uid, best[1]))
@@ -982,6 +1046,49 @@ class Cluster:
                  "decode": max_new_tokens * hd.decode_tick_s,
                  "media": float(media_delay_s),
                  "link": hp.up_s + hd.down_s}
+        return sum(terms.values()), terms
+
+    def predict_spec_e2e_s(self, draft: int, verify: int,
+                           prompt_tokens: int, max_new_tokens: int, *,
+                           media_delay_s: float = 0.0
+                           ) -> "tuple[float, dict] | None":
+        """Predicted e2e of the *speculative* dispatch shape — handle
+        ``draft``'s device prices the per-tick draft steps while handle
+        ``verify`` runs prefill + multi-token verification — decomposed
+        per term; the fourth shape ``QLMIORouter.plan`` prices (via
+        ``spec_pred``) against pure and disaggregated dispatch.  None
+        when ``verify`` is not a speculative handle.
+
+        ``draft == verify`` is colocated speculation; a distinct edge
+        ``draft`` is the edge-drafts/cloud-verifies mode, whose only
+        cross-device traffic is ``spec_k`` token ids per tick
+        (``draft_link``) — the verify tick is re-priced with the draft
+        steps on the *draft handle's* device, and the expected emitted
+        tokens per tick come from the verify engine's live measured
+        acceptance rate (telemetry feedback)."""
+        hd, hv = self.handles[draft], self.handles[verify]
+        ev = hv.engine
+        if hv.spec_tick_s is None or hv.draft_profile is None:
+            return None
+        k = getattr(ev, "spec_k", hv.spec_k)
+        tick = float(hv.time_scale * cm.speculative_tick_s(
+            hv.device, hv.profile, hv.draft_profile, k,
+            context_tokens=ev.max_seq / 2, kv_dtype=hv.kv_dtype,
+            draft_device=hd.device))
+        # k drafted token ids uplink per tick (ids pipeline on the
+        # persistent stream: bytes only, no per-tick RTT)
+        link_bw = min(hd.device.net_bw, hv.device.net_bw)
+        draft_link = 0.0 if draft == verify else k * 4.0 / link_bw
+        e_acc = float(cm.expected_accepted(k, ev.acceptance_rate()))
+        n_pref = float(cm.chunked_prefill_tokens(
+            prompt_tokens, ev.prefill_chunk if ev.chunked else 0,
+            minimum=ev.min_bucket if ev.bucketing else 1))
+        terms = {"queue": hv._load()["backlog_s"],
+                 "prefill": n_pref * hv.prefill_tok_s,
+                 "decode": max_new_tokens * tick / e_acc,
+                 "draft_link": max_new_tokens * draft_link / e_acc,
+                 "media": float(media_delay_s),
+                 "link": hv.up_s + hv.down_s}
         return sum(terms.values()), terms
 
     def drain(self, max_virtual_s: float | None = None,

@@ -197,6 +197,8 @@ class ServingEngine:
                  prefill_budget: int | None = None,
                  bucket_prompts: bool = True, min_bucket: int = 16,
                  return_logits: bool = False,
+                 draft_config=None, draft_params=None, draft_seed: int = 0,
+                 spec_k: int = 3,
                  sorted_batch_sizes: "list[int] | None" = None,
                  max_live_batches: "int | None" = None,
                  batching_wait_secs: float = 0.0,
@@ -226,6 +228,23 @@ class ServingEngine:
         and returns ``[B]`` token ids (one int32 per slot per tick over
         the host link); True restores the full ``[B, vocab]`` logits
         transfer for tests/inspection.
+
+        ``draft_config`` — an ``ArchConfig`` for a small draft model
+        turns on **speculative decoding** (paged backend only): each
+        tick the draft model proposes ``spec_k`` tokens per active slot
+        (dense draft cache, one cheap decode step per proposal), the
+        target model scores all of them in *one* multi-token verify pass
+        (``Model.verify_step_paged`` over the Pallas paged-verify
+        kernel, amortized across the batch), and the longest agreeing
+        prefix plus the target's correction token is emitted — 1 to
+        ``spec_k + 1`` tokens per slot per tick, **bit-identical** to
+        plain greedy decode regardless of draft quality.  Rejected
+        draft positions keep their scattered K/V: they sit past the
+        accepted position, every causal read masks them, and the next
+        tick overwrites them — rollback is positional, never a page
+        copy.  ``draft_params`` supplies the draft weights (default: a
+        fresh init from ``draft_seed``).  The draft model must be
+        attention-family with the same vocab as the target.
 
         ``sorted_batch_sizes`` / ``max_live_batches`` /
         ``batching_wait_secs`` — saxml-style admission batching (the
@@ -340,6 +359,14 @@ class ServingEngine:
         # streamed-token counter (0 for drain-only workloads)
         self._h_admit_size = m.histogram("batch_admit_size")
         self._c_stream_tokens = m.counter("stream_tokens")
+        # speculative decoding: drafted = spec_k per active slot per tick;
+        # accepted = drafts consumed into the output stream; wasted =
+        # drafted - accepted (verify compute spent on rejected tokens).
+        # acceptance_rate() and the router's spec-shape pricing read these.
+        self._c_spec_drafted = m.counter("spec_tokens_drafted")
+        self._c_spec_accepted = m.counter("spec_tokens_accepted")
+        self._c_spec_wasted = m.counter("spec_tokens_wasted")
+        self._g_accept_rate = m.gauge("spec_acceptance_rate")
         self._g_queue_depth = m.gauge("queue_depth")
         m.view("ticks", lambda: self.ticks)
         m.view("kv_cache_bytes", self.kv_cache_bytes)
@@ -388,6 +415,52 @@ class ServingEngine:
             if self.chunked:
                 self._prefill_chunk = jax.jit(model.prefill_chunk_dense,
                                               donate_argnums=(1,))
+        # ---- speculative decoding (draft model + multi-token verify)
+        self.spec_k = int(spec_k)
+        self.speculative = draft_config is not None
+        if self.speculative:
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding needs the paged cache backend "
+                    "(the verify pass writes draft K/V through block "
+                    "tables); use paged=True")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            self.draft_model = Model(draft_config)
+            if not self.draft_model.supports_paged:
+                raise ValueError(
+                    f"{draft_config.name}: the draft model must be "
+                    "attention-family (dense-cache decode)")
+            if draft_config.vocab != model.cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_config.vocab} != target vocab "
+                    f"{model.cfg.vocab}: token-level rejection sampling "
+                    "needs a shared vocabulary")
+            self.draft_params = (draft_params if draft_params is not None
+                                 else self.draft_model.init(
+                                     jax.random.PRNGKey(int(draft_seed))))
+            # the draft runs a plain dense cache: its KV is tiny, it never
+            # shares pages, and stale entries past a rejection are masked
+            # by position then overwritten by the next draft chain
+            dab = self.draft_model.abstract_cache(max_batch, max_seq)
+            self._draft_cache = {
+                k: (jnp.full(v.shape, -1, v.dtype) if k == "pos_map"
+                    else jnp.zeros(v.shape, v.dtype))
+                for k, v in dab.items()}
+            self._draft_prefill = jax.jit(self.draft_model.prefill)
+
+            def _dstep(params, cache, batch,
+                       _base=self.draft_model.serve_step):
+                logits, cache = _base(params, cache, batch)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+            def _vstep(params, cache, batch,
+                       _base=model.verify_step_paged):
+                logits, cache = _base(params, cache, batch)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+            self._draft_step = jax.jit(_dstep, donate_argnums=(1,))
+            self._verify_step = jax.jit(_vstep, donate_argnums=(1,))
         self.ticks = 0
         self._progress = False
         self.finished: list[Request] = []
@@ -428,8 +501,14 @@ class ServingEngine:
 
     def _splice(self, slot: int, req_cache: dict, prompt_len: int):
         """Insert a single-request prefill cache into batch slot ``slot``."""
+        self.cache = self._splice_cache(self.cache, slot, req_cache)
+
+    @staticmethod
+    def _splice_cache(cache: dict, slot: int, req_cache: dict) -> dict:
+        """Insert a single-request prefill cache into slot ``slot`` of a
+        dense batch cache (the engine's own, or the draft model's)."""
         new = {}
-        for name, leaf in self.cache.items():
+        for name, leaf in cache.items():
             rc = req_cache[name]
             bdim = _BATCH_DIM[name]
             if name in _SEQ_DIM:  # pad request cache S' -> max_seq
@@ -441,7 +520,7 @@ class ServingEngine:
             idx = [slice(None)] * leaf.ndim
             idx[bdim] = slice(slot, slot + 1)
             new[name] = leaf.at[tuple(idx)].set(rc.astype(leaf.dtype))
-        self.cache = new
+        return new
 
     def _bucket(self, n: int, *, cap: int | None = None) -> int:
         if not self.bucketing:
@@ -523,8 +602,13 @@ class ServingEngine:
             table.pages[blk] = new
 
     def _total_blocks(self, req: Request) -> int:
-        """Worst-case pages this request can ever hold (prompt + decode)."""
-        horizon = min(len(req.tokens) + req.max_new_tokens, self.max_seq)
+        """Worst-case pages this request can ever hold (prompt + decode;
+        speculation adds ``spec_k`` scratch positions so the verify pass
+        can always scatter its draft K/V one tick ahead of acceptance)."""
+        horizon = len(req.tokens) + req.max_new_tokens
+        if self.speculative:
+            horizon += self.spec_k
+        horizon = min(horizon, self.max_seq)
         return ceil_blocks(horizon, self.page_size)
 
     def _growth_outstanding(self) -> int:
@@ -800,6 +884,10 @@ class ServingEngine:
         self._c_kv_imported_pages.inc(nb - n_hit)
         self._c_kv_import_bytes.inc((nb - n_hit) * self.page_bytes())
         self._c_prefix_reused.inc(n_hit * self.page_size)
+        if self.speculative:
+            # the snapshot carries no draft-model state: rebuild it by
+            # draft-prefilling the context (prompt + emitted tokens)
+            self._draft_install(slot, snap.tokens)
         self._progress = True
         return True
 
@@ -1126,6 +1214,34 @@ class ServingEngine:
         self.slots[slot] = req
         self.pos[slot] = len(req.tokens)
         self.budget[slot] = req.max_new_tokens - 1
+        if self.speculative:
+            self._draft_install(slot, req.tokens)
+
+    def _draft_install(self, slot: int, tokens):
+        """(Re)build the draft model's dense-cache state for ``slot`` by
+        prefilling ``tokens`` (the prompt — or, for an imported snapshot,
+        prompt + already-emitted output) with the draft weights.  Media
+        key ids are clamped to token 0, so draft quality may drop over
+        embedding spans; verification makes the emitted stream
+        independent of draft quality either way."""
+        toks = np.asarray(tokens, np.int64)
+        T = len(toks)
+        Sb = self._bucket(T)
+        batch = {"tokens": self._padded_prompt(toks, Sb)}
+        if self.bucketing:
+            batch["length"] = jnp.asarray([T], jnp.int32)
+        self._note_trace(("draft_prefill", Sb))
+        _, rc = self._draft_prefill(self.draft_params, batch)
+        self._draft_cache = self._splice_cache(self._draft_cache, slot, rc)
+
+    def acceptance_rate(self, default: float = 0.6) -> float:
+        """Live draft-token acceptance rate (accepted / drafted) since the
+        last ``metrics.reset()``; ``default`` until any tokens have been
+        drafted.  The router's speculative-shape pricing reads this."""
+        drafted = self._c_spec_drafted.value
+        if drafted <= 0:
+            return float(default)
+        return self._c_spec_accepted.value / drafted
 
     def _admit(self):
         """Monolithic admission path (chunking disabled, or recurrent/
@@ -1186,6 +1302,10 @@ class ServingEngine:
             if n_prefilling:
                 self.ticks += 1
             return n_prefilling
+        if self.speculative:
+            self._spec_tick(active)
+            self.ticks += 1
+            return len(active) + n_prefilling
         tokens = np.zeros(self.max_batch, np.int32)
         # slots without a decodable request (free, or still prefilling) are
         # masked out of the decode step: dense writes land at the
@@ -1234,6 +1354,114 @@ class ServingEngine:
                 self._finish(req)
                 self._free_slot(i)  # free slot/pages (continuous batching)
         return len(active) + n_prefilling
+
+    def _spec_tick(self, active: "list[int]"):
+        """One speculative decode tick: the draft model proposes ``spec_k``
+        tokens per active slot (``spec_k`` cheap dense decode steps), the
+        target model scores the last accepted token plus all drafts in one
+        multi-token verify pass, and each slot emits the longest agreeing
+        prefix plus the target's correction token — 1 to ``spec_k + 1``
+        tokens, bit-identical to plain greedy decode.
+
+        Rejected drafts leave stale K/V at positions past the new ``pos``
+        in both caches; every read masks ``cache_pos <= query_pos`` and the
+        next tick's writes overwrite them in order, so rollback costs
+        nothing.  Stream events are emitted per token with contiguous
+        indices and timestamps interpolated across the tick (monotone
+        non-decreasing), and ``final`` only on the true last token."""
+        k = self.spec_k
+        B = self.max_batch
+        t0 = self._now()
+        # masked slots (free / mid-prefill): pos = max_seq puts every dense
+        # draft write out of bounds (dropped) and, with a null block table,
+        # every verify write/read on an invalid page (dropped/masked)
+        cur = np.zeros(B, np.int32)
+        base = np.full(B, self.max_seq, np.int64)
+        for i in active:
+            cur[i] = self.slots[i].output[-1]
+            base[i] = self.pos[i]
+        drafts = np.zeros((B, k), np.int32)
+        for t in range(k):
+            dpos = np.minimum(base + t, self.max_seq)
+            ids, self._draft_cache = self._draft_step(
+                self.draft_params, self._draft_cache,
+                {"tokens": jnp.asarray(cur),
+                 "pos": jnp.asarray(dpos, jnp.int32)})
+            cur = np.asarray(ids)
+            drafts[:, t] = cur
+        t_draft = self._now() if self._tr is not None else t0
+        # grow block tables to cover the k+1 verify positions; admission
+        # reserved spec_k slack in _total_blocks, so this cannot exhaust
+        # the pool (positions clamped at max_seq simply drop their writes)
+        for i in active:
+            bt = self.block_tables[i]
+            cap = min(int(base[i]) + k + 1, self.max_seq)
+            if cap > bt.num_tokens_capacity():
+                bt.ensure_capacity(cap)
+                self.tables[i] = bt.as_row(self.max_blocks)
+        vt = np.zeros((B, k + 1), np.int32)
+        for i in active:
+            vt[i, 0] = self.slots[i].output[-1]
+            vt[i, 1:] = drafts[i]
+        tables = np.full_like(self.tables, -1)
+        for i in active:
+            tables[i] = self.tables[i]
+        ids, self.cache = self._verify_step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(vt),
+             "pos": jnp.asarray(np.minimum(base, self.max_seq), jnp.int32),
+             "block_tables": jnp.asarray(tables)})
+        ids = np.asarray(ids)  # [B, k+1] target argmax per verify position
+        t_now = self._now()
+        if self._tr is not None:
+            self._tr.span("draft_tick", "engine", t0, t_draft,
+                          pid=self._pid, args={"active": len(active),
+                                               "k": k})
+            self._tr.span("verify_tick", "engine", t_draft, t_now,
+                          pid=self._pid, args={"active": len(active),
+                                               "k": k})
+        n_tok = tick_acc = 0
+        for i in active:
+            req = self.slots[i]
+            # ids[i, j] is the target's token after consuming vt[i, :j+1];
+            # draft j (= vt[i, j+1]) is accepted iff it equals ids[i, j]
+            n_acc = 0
+            while n_acc < k and drafts[i, n_acc] == ids[i, n_acc]:
+                n_acc += 1
+            emit = [int(x) for x in ids[i, :n_acc + 1]]
+            n_emit = len(emit)
+            emitted = 0
+            for tok in emit:
+                emitted += 1
+                req.output.append(tok)
+                ts = t0 + (t_now - t0) * emitted / n_emit
+                req.token_times.append(ts)
+                self.pos[i] += 1
+                self.budget[i] -= 1
+                ends = bool(self.budget[i] <= 0 or tok == self.eos_id
+                            or self.pos[i] >= self.max_seq - 1)
+                self._emit_stream(req, tok, ts, ends)
+                if ends:
+                    self._finish(req)
+                    self._free_slot(i)
+                    break
+            # drafts consumed into the stream; accepted-but-unemitted
+            # drafts past an eos/budget stop count as wasted
+            acc = emitted - 1
+            self._c_spec_drafted.inc(k)
+            self._c_spec_accepted.inc(acc)
+            self._c_spec_wasted.inc(k - acc)
+            n_tok += emitted
+            tick_acc += acc
+        self._c_decode_tokens.inc(n_tok)
+        drafted = self._c_spec_drafted.value
+        if drafted:
+            self._g_accept_rate.set(self._c_spec_accepted.value / drafted)
+        if self._tr is not None:
+            self._tr.counter("spec_tokens", t_now,
+                             {"drafted": k * len(active),
+                              "accepted": tick_acc,
+                              "emitted": n_tok}, pid=self._pid)
 
     def _sample_tick(self, n_active: int, n_prefilling: int):
         """Per-tick occupancy counter samples (tracing enabled only)."""
@@ -1336,7 +1564,8 @@ class ServingEngine:
         version exposes them) — ground truth for the recompile-storm
         regression test."""
         out = {}
-        for name in ("_prefill", "_prefill_sfx", "_prefill_chunk", "_step"):
+        for name in ("_prefill", "_prefill_sfx", "_prefill_chunk", "_step",
+                     "_draft_prefill", "_draft_step", "_verify_step"):
             fn = getattr(self, name, None)
             size = getattr(fn, "_cache_size", None)
             if size is not None:
@@ -1366,7 +1595,11 @@ class ServingEngine:
         percentiles under ``"latency"`` (the ``latency_stats()`` block —
         that method remains as a documented alias)."""
         out = {"paged": self.paged, "kv_dtype": self.kv_dtype,
-               "bucketed": self.bucketing, "chunked": self.chunked}
+               "bucketed": self.bucketing, "chunked": self.chunked,
+               "speculative": self.speculative,
+               "spec_k": self.spec_k if self.speculative else 0,
+               "acceptance_rate": (self.acceptance_rate()
+                                   if self.speculative else None)}
         out.update(self.metrics.snapshot())
         out["latency"] = self.latency_stats()
         return out

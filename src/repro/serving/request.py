@@ -78,6 +78,11 @@ class ContinuumRequest:
     * ``server`` — dispatch target (required by ``Cluster.submit``).
     * ``decode_server`` — disaggregated shape: prefill on ``server``,
       KV-migrate, decode there.
+    * ``draft_server`` — speculative shape: ``server`` (or
+      ``decode_server``) runs prefill + multi-token verify, while this
+      server's device prices the ``spec_k`` draft steps per tick — the
+      edge-drafts/cloud-verifies offloading mode (only token ids ride
+      the uplink).  Equal to the decode server = colocated speculation.
     * ``predicted_s`` / ``utility`` — the router's predicted e2e seconds
       and Eq. 21 utility for the chosen shape (audit trail).
     """
@@ -94,6 +99,7 @@ class ContinuumRequest:
     # --- router / plan annotations
     server: "int | None" = None
     decode_server: "int | None" = None
+    draft_server: "int | None" = None
     predicted_s: "float | None" = None
     utility: "float | None" = None
 

@@ -120,7 +120,8 @@ class QLMIORouter:
     def __init__(self, servers: "list[ServerHandle]", milp_pred, mgqp_pred,
                  *, quality_weight: float = 1.0, hedge_factor: float = 3.0,
                  policy=None, prefix_hit_pred=None, prefill_pred=None,
-                 media_pred=None, migrate_pred=None, telemetry=None):
+                 media_pred=None, migrate_pred=None, spec_pred=None,
+                 telemetry=None):
         """milp_pred(task, server) -> seconds; mgqp_pred(task, server) ->
         P(success).  ``policy`` optionally overrides the scoring rule with a
         trained QLMIO agent's argmax.
@@ -151,6 +152,19 @@ class QLMIORouter:
         for a KV-incompatible pair.  With it, ``plan`` scores every
         (prefill, decode) pair alongside the pure single-server shapes.
 
+        ``spec_pred(task, draft_server, verify_server) -> seconds``
+        optionally prices the *speculative* dispatch shape — the verify
+        server runs prefill plus acceptance-discounted multi-token
+        verification while ``draft_server``'s device prices the per-tick
+        draft steps (serving/cluster.Cluster.predict_spec_e2e_s gives
+        the live version, fed by the verify engine's measured acceptance
+        rate) — returning the pair's total predicted latency, or None
+        when the pair cannot speculate (verify server not speculative,
+        or speculation predicted slower than its own plain decode).
+        ``draft_server == verify_server`` prices colocated speculation;
+        a distinct edge draft server is the paper's edge-drafts/
+        cloud-verifies offloading mode.
+
         ``telemetry`` (repro/serving/telemetry.Telemetry) optionally
         audits every ``dispatch``: the chosen server, its predicted
         latency, every candidate's effective latency, and — this path
@@ -167,6 +181,7 @@ class QLMIORouter:
         self.prefill_pred = prefill_pred
         self.media_pred = media_pred
         self.migrate_pred = migrate_pred
+        self.spec_pred = spec_pred
         self.telemetry = telemetry
         self.health = HealthTracker(len(servers))
         self.queue_s = np.zeros(len(servers))
@@ -252,12 +267,17 @@ class QLMIORouter:
         """Price every dispatch *shape* and return the best: pure
         prefill-and-decode-here for each healthy server, plus — when
         ``migrate_pred`` is given — disaggregated prefill-on-A/
-        decode-on-B for every healthy, KV-compatible ordered pair.
+        decode-on-B for every healthy, KV-compatible ordered pair, plus
+        — when ``spec_pred`` is given — speculative draft-on-A/
+        verify-on-B for every healthy pair (including A == B, colocated
+        speculation; a distinct edge A is edge-drafts/cloud-verifies).
 
         Given a task id, returns the legacy ``{"server": decode server,
-        "prefill_server": prefill server or None (pure), "utility",
-        "predicted_s"}`` dict; a disaggregated winner maps onto
-        ``Cluster.submit(server=prefill_server, decode_server=server)``.
+        "prefill_server": prefill server or None (pure),
+        "draft_server": draft server or None (non-speculative),
+        "utility", "predicted_s"}`` dict; a disaggregated winner maps
+        onto ``Cluster.submit(server=prefill_server,
+        decode_server=server)``.
 
         Given a typed ``ContinuumRequest`` (its ``task`` field names the
         MIOBench task the predictors score), returns the request
@@ -277,8 +297,9 @@ class QLMIORouter:
         strag = np.array([self.health.straggler_factor(s)
                           for s in range(n)])
         b_hat = np.array([self.mgqp(task, s) for s in range(n)])
-        # (total_s, decode_server, prefill_server-or-None) per shape
-        shapes = [((t_eff[s] + self.queue_s[s]) * strag[s], s, None)
+        # (total_s, decode_server, prefill_server-or-None,
+        #  draft_server-or-None) per shape
+        shapes = [((t_eff[s] + self.queue_s[s]) * strag[s], s, None, None)
                   for s in range(n) if healthy[s]]
         if self.migrate_pred is not None:
             for sp in range(n):
@@ -292,7 +313,18 @@ class QLMIORouter:
                     # charge the worse backlog and the worse straggler
                     total = ((t + max(self.queue_s[sp], self.queue_s[sd]))
                              * max(strag[sp], strag[sd]))
-                    shapes.append((total, sd, sp))
+                    shapes.append((total, sd, sp, None))
+        if self.spec_pred is not None:
+            for sa in range(n):  # draft server (may equal the verifier)
+                for sv in range(n):  # verify/decode server
+                    if not (healthy[sa] and healthy[sv]):
+                        continue
+                    t = self.spec_pred(task, sa, sv)
+                    if t is None:  # pair cannot (profitably) speculate
+                        continue
+                    total = ((t + max(self.queue_s[sa], self.queue_s[sv]))
+                             * max(strag[sa], strag[sv]))
+                    shapes.append((total, sv, None, sa))
         if not shapes:  # every server in cooldown: mirror route()
             best = int(np.argmin(self.health.dead_until))
             logger.warning(
@@ -304,22 +336,26 @@ class QLMIORouter:
                                       predicted_s=float("inf"),
                                       utility=float("-inf"))
             return {"server": best, "prefill_server": None,
+                    "draft_server": None,
                     "utility": -np.inf, "predicted_s": float("inf")}
-        norm = max(min(t for t, _, _ in shapes), 1e-6)
+        norm = max(min(t for t, _, _, _ in shapes), 1e-6)
         utility = lambda e: -e[0] / norm + self.w * (3.0 * b_hat[e[1]] - 2.0)
         best = max(shapes, key=utility)
-        total, decode_s, prefill_s = best
+        total, decode_s, prefill_s, draft_s = best
         if creq is not None:
             # disaggregated shape: Cluster.submit prefills on ``server``
             # and decodes on ``decode_server`` — map accordingly
             if prefill_s is None:
                 return creq.with_plan(server=decode_s, decode_server=None,
+                                      draft_server=draft_s,
                                       predicted_s=float(total),
                                       utility=float(utility(best)))
             return creq.with_plan(server=prefill_s, decode_server=decode_s,
+                                  draft_server=draft_s,
                                   predicted_s=float(total),
                                   utility=float(utility(best)))
         return {"server": decode_s, "prefill_server": prefill_s,
+                "draft_server": draft_s,
                 "utility": float(utility(best)),
                 "predicted_s": float(total)}
 

@@ -211,6 +211,78 @@ def kv_concurrency(device: DeviceProfile, model: ModelProfile,
     return int(hbm_frac * free / per_seq)
 
 
+# ---------------------------------------------------- speculative decoding
+#
+# Speculative serving replaces one target decode step per token with
+# ``k`` draft-model decode steps plus ONE multi-token verify pass of the
+# target (kernels/paged_verify): the verify streams the target weights and
+# the KV context once — like a single decode step — while scoring k+1
+# positions, so its extra cost over plain decode is almost pure FLOPs.
+# At acceptance rate ``a`` each tick emits 1..k+1 tokens (expected
+# ``(1 - a^(k+1)) / (1 - a)``), which is what discounts the effective ITL.
+
+
+def draft_s(device: DeviceProfile, draft_model: ModelProfile,
+            tokens=1.0, context_tokens=0.0) -> np.ndarray:
+    """Seconds the draft model spends proposing ``tokens`` tokens — plain
+    decode roofline of the (small) draft profile; the draft cache is
+    dense bf16 regardless of the target pool's precision."""
+    return decode_s(device, draft_model, tokens,
+                    context_tokens=context_tokens, kv_dtype="bf16")
+
+
+def verify_s(device: DeviceProfile, model: ModelProfile, k,
+             context_tokens=0.0, kv_dtype: str = "bf16") -> np.ndarray:
+    """One multi-token verify pass scoring ``k`` positions: the active
+    weights and the resident KV context stream through HBM **once**
+    (the paged-verify kernel reads each page a single time for all query
+    rows), plus ``2 * n_active * k`` FLOPs of batched scoring."""
+    weights = model.n_active * model.bytes_per_param
+    kv = kv_bytes_per_token(model, kv_dtype) * np.asarray(
+        context_tokens, float)
+    mem = (weights + kv) / (device.mem_bw * _EFF)
+    flop = 2.0 * model.n_active * np.asarray(k, float) / (
+        device.flops * _EFF)
+    return mem + flop
+
+
+def expected_accepted(k, acceptance) -> np.ndarray:
+    """Expected tokens emitted per speculative tick with ``k`` drafts at
+    per-token acceptance rate ``a``: the accepted prefix plus the
+    target's correction/bonus token, ``1 + a + ... + a^k``."""
+    a = np.clip(np.asarray(acceptance, float), 0.0, 0.9999)
+    return (1.0 - a ** (np.asarray(k, float) + 1.0)) / (1.0 - a)
+
+
+def speculative_tick_s(device: DeviceProfile, model: ModelProfile,
+                       draft_model: ModelProfile, k, context_tokens=0.0,
+                       kv_dtype: str = "bf16",
+                       draft_device: DeviceProfile | None = None):
+    """Seconds one speculative tick costs: ``k`` draft decode steps (on
+    ``draft_device`` — None = colocated with the target; the edge-drafts/
+    cloud-verifies shape prices drafting on the edge device) plus one
+    ``k+1``-position verify pass of the target."""
+    dd = draft_device if draft_device is not None else device
+    return (np.asarray(k, float)
+            * draft_s(dd, draft_model, 1.0, context_tokens)
+            + verify_s(device, model, np.asarray(k, float) + 1.0,
+                       context_tokens, kv_dtype))
+
+
+def speculative_itl_s(device: DeviceProfile, model: ModelProfile,
+                      draft_model: ModelProfile, k, acceptance,
+                      context_tokens=0.0, kv_dtype: str = "bf16",
+                      draft_device: DeviceProfile | None = None):
+    """Acceptance-discounted effective inter-token latency of speculative
+    decoding: one tick's cost amortized over the expected emitted tokens.
+    Below-breakeven acceptance makes this *worse* than plain decode —
+    exactly the signal the router needs to fall back."""
+    tick = speculative_tick_s(device, model, draft_model, k,
+                              context_tokens, kv_dtype,
+                              draft_device=draft_device)
+    return tick / expected_accepted(k, acceptance)
+
+
 def expected_out_tokens(model: ModelProfile, difficulty) -> np.ndarray:
     gap = np.maximum(0.15, 0.75 + difficulty - model.capability)
     return _COT_BASE + _COT_SCALE * gap ** 2

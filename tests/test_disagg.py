@@ -377,7 +377,7 @@ def test_router_plan_falls_back_to_pure():
     or more expensive — plan() degrades to the pure argmax route()."""
     r = _stub_router([1.0, 5.0], migrate=None)
     p = r.plan(0)
-    assert p == {"server": 0, "prefill_server": None,
+    assert p == {"server": 0, "prefill_server": None, "draft_server": None,
                  "utility": pytest.approx(p["utility"]),
                  "predicted_s": pytest.approx(p["predicted_s"])}
     r2 = _stub_router([1.0, 5.0], migrate=lambda t, sp, sd: None)

@@ -1,0 +1,325 @@
+"""Speculative decoding: paged multi-token-verify kernel parity vs the
+jnp oracles (padding, windows, null-page poisoning), greedy bit-identity
+of speculation on vs off across {bf16,int8} x {chunked,monolithic}
+prefill, rejected-draft KV rollback page accounting, the acceptance-
+discounted cost-model math, and the router's fourth dispatch shape
+(draft-on-A/verify-on-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import ops, ref
+from repro.kernels.quant import quantize_kv
+from repro.models import build_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import QLMIORouter, ServerHandle
+from repro.sim import cost_model as cm
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------ kernel-vs-oracle parity
+
+
+def _pool(rng, B, S, Hkv, D, bs):
+    NB = S // bs
+    P = 1 + B * NB
+    k = jnp.asarray(rng.normal(size=(P, bs, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(P, bs, Hkv, D)), jnp.bfloat16)
+    bt = jnp.asarray(np.arange(1, 1 + B * NB).reshape(B, NB), jnp.int32)
+    return k, v, bt
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,bs,T,window", [
+    (2, 96, 8, 2, 64, 16, 4, 0),
+    (1, 64, 4, 4, 32, 8, 3, 24),   # sliding window crosses page edges
+    (2, 72, 8, 1, 64, 8, 5, 0),    # MQA + non-power-of-two T (padding)
+])
+def test_paged_verify_kernel_parity(B, S, H, Hkv, D, bs, T, window):
+    rng = _rng(7)
+    k, v, bt = _pool(rng, B, S, Hkv, D, bs)
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.bfloat16)
+    pos = jnp.asarray(rng.integers(S // 2, S - T, B), jnp.int32)
+    out = ops.paged_verify(q, k, v, bt, pos, window=window)
+    want = ref.paged_verify_ref(q, k, v, bt, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_paged_verify_rows_match_sequential_decode():
+    """Row t of one verify pass must equal a single-token paged decode at
+    position pos+t over the same pool — the property that makes the
+    emitted prefix bit-identical to sequential decoding."""
+    rng = _rng(5)
+    B, S, H, Hkv, D, bs, T = 2, 64, 4, 2, 32, 8, 4
+    k, v, bt = _pool(rng, B, S, Hkv, D, bs)
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.bfloat16)
+    pos = jnp.asarray([17, 40], jnp.int32)
+    out = ref.paged_verify_ref(q, k, v, bt, pos)
+    for t in range(T):
+        step = ref.paged_decode_ref(q[:, t], k, v, bt, pos + t)
+        np.testing.assert_allclose(np.asarray(out[:, t], np.float32),
+                                   np.asarray(step, np.float32),
+                                   atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,bs,T,window", [
+    (2, 96, 8, 2, 64, 16, 4, 0),
+    (1, 64, 4, 4, 32, 8, 3, 24),
+])
+def test_paged_verify_quant_kernel_parity(B, S, H, Hkv, D, bs, T, window):
+    rng = _rng(11)
+    k, v, bt = _pool(rng, B, S, Hkv, D, bs)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.bfloat16)
+    pos = jnp.asarray(rng.integers(S // 2, S - T, B), jnp.int32)
+    out = ops.paged_verify_quant(q, k8, v8, ks, vs, bt, pos, window=window)
+    want = ref.paged_verify_quant_ref(q, k8, v8, ks, vs, bt, pos,
+                                      window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-3, rtol=5e-3)
+    # dequant noise vs the full-precision pool stays int8-sized
+    full = ref.paged_verify_ref(q, k, v, bt, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_paged_verify_quant_masks_unallocated():
+    """-1 table entries (clamped to the null page) must not leak the null
+    page's garbage values or scales into any verify row."""
+    rng = _rng(3)
+    B, H, Hkv, D, bs, T = 1, 4, 2, 32, 8, 3
+    P = 4
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(P, bs, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(P, bs, Hkv, D)), jnp.bfloat16)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    ks = ks.at[0].set(1e6)  # poison the null page with huge scales
+    vs = vs.at[0].set(1e6)
+    bt = jnp.asarray([[1, 2, -1]], jnp.int32)
+    pos = jnp.asarray([2 * bs - T], jnp.int32)  # last row ends block 1
+    out = ops.paged_verify_quant(q, k8, v8, ks, vs, bt, pos)
+    want = ref.paged_verify_quant_ref(q, k8, v8, ks, vs, bt, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-3, rtol=5e-3)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+# ----------------------------------------- engine: greedy bit-identity
+
+
+def _serve(model, params, prompts, *, max_new_tokens=12, **kw):
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64, **kw)
+    reqs = [Request(i, np.asarray(p, np.int32),
+                    max_new_tokens=max_new_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, [tuple(r.output) for r in reqs]
+
+
+_PROMPTS = [[1, 2, 3, 4, 5, 6, 7], [9, 8, 7, 6, 5]]
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("prefill_chunk", [0, 8])
+def test_spec_greedy_bit_identity(qwen, kv_dtype, prefill_chunk):
+    """Speculation must never change the emitted greedy stream: the
+    verify pass accepts exactly the prefix sequential decode would have
+    produced, across both KV precisions and both prefill paths."""
+    cfg, model, params = qwen
+    kw = dict(kv_dtype=kv_dtype, prefill_chunk=prefill_chunk)
+    _, base = _serve(model, params, _PROMPTS, **kw)
+    eng, spec = _serve(model, params, _PROMPTS, draft_config=cfg,
+                       draft_seed=123, spec_k=3, **kw)
+    assert spec == base
+    st = eng.stats()
+    assert st["speculative"] and st["spec_k"] == 3
+    assert st["spec_tokens_drafted"] > 0
+    assert st["spec_tokens_accepted"] + st["spec_tokens_wasted"] == \
+        st["spec_tokens_drafted"]
+
+
+def test_spec_acceptance_telemetry(qwen):
+    """The live acceptance gauge the router's fourth-shape pricing reads
+    is exactly accepted / drafted.  (Even a self-draft — same seed-0
+    init — stays well below 1.0 on this reduced random-weight model:
+    near-uniform logits let float-reduction order flip the argmax
+    between the dense draft pass and the paged verify.)"""
+    cfg, model, params = qwen
+    eng, spec = _serve(model, params, _PROMPTS, draft_config=cfg,
+                       draft_seed=0, spec_k=3)
+    _, base = _serve(model, params, _PROMPTS)
+    assert spec == base
+    st = eng.stats()
+    assert st["spec_tokens_drafted"] > 0
+    assert eng.acceptance_rate() == pytest.approx(
+        st["spec_tokens_accepted"] / st["spec_tokens_drafted"])
+    assert 0.0 < eng.acceptance_rate() <= 1.0
+
+
+def test_spec_rollback_releases_pages(qwen):
+    """Rejected drafts leave scattered K/V beyond the accepted position;
+    rollback is positional (stale rows masked by qpos, overwritten next
+    tick) and must not leak pages: the pool drains to zero and refcounts
+    stay consistent for warm prefix reuse afterwards."""
+    cfg, model, params = qwen
+    eng, outs = _serve(model, params, _PROMPTS, draft_config=cfg,
+                       draft_seed=123, spec_k=3)
+    assert eng.stats()["spec_tokens_wasted"] > 0  # drafts really rejected
+    # drained pool: no live references; every page is either free or
+    # parked (ref 0) behind the prefix registry
+    assert eng.pool.pages_in_use() == 0
+    assert eng.pool.num_free() == eng.pool.num_pages - 1
+    # a fresh resubmission of the same prompt must still replay exactly
+    warm = Request(99, np.asarray(_PROMPTS[0], np.int32),
+                   max_new_tokens=12)
+    eng.submit(warm)
+    eng.run_until_drained()
+    assert tuple(warm.output) == outs[0]
+
+
+def test_spec_needs_paged_backend(qwen):
+    cfg, model, params = qwen
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(model, params, paged=False, draft_config=cfg)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServingEngine(model, params, draft_config=cfg, spec_k=0)
+
+
+# ------------------------------------------------- cost model: speculation
+
+
+def test_expected_accepted_identities():
+    assert cm.expected_accepted(3, 0.0) == 1.0  # bonus token only
+    assert cm.expected_accepted(2, 0.5) == pytest.approx(1.75)
+    # a -> 1 saturates at k + 1 tokens per tick (clipped below 1.0)
+    assert cm.expected_accepted(4, 1.0) == pytest.approx(5.0, rel=1e-3)
+    # monotone in both k and a
+    assert cm.expected_accepted(4, 0.6) > cm.expected_accepted(2, 0.6)
+    assert cm.expected_accepted(3, 0.8) > cm.expected_accepted(3, 0.4)
+
+
+def test_verify_streams_memory_once():
+    """The verify pass prices like ONE decode step plus FLOPs: weights
+    and KV context stream once for all k+1 rows, so verify_s(k) is far
+    below k sequential decode steps and barely above verify_s(1)."""
+    dev = cm.DEVICES["rtx3090ti"]
+    mdl = cm.MODELS["qwen3vl-8b"]
+    v1 = float(cm.verify_s(dev, mdl, 1, context_tokens=4096))
+    v8 = float(cm.verify_s(dev, mdl, 8, context_tokens=4096))
+    seq8 = 8 * float(cm.decode_s(dev, mdl, 1, context_tokens=4096))
+    assert v8 < 2 * v1  # memory term dominates and is paid once
+    assert v8 < 0.5 * seq8
+
+
+def test_speculative_tick_decomposition():
+    dev = cm.DEVICES["rtx3090ti"]
+    edge = cm.DEVICES["jetson_orin_nano"]
+    mdl = cm.MODELS["qwen3vl-8b"]
+    drf = cm.MODELS["qwen3vl-2b"]
+    k, ctx = 3, 48
+    tick = float(cm.speculative_tick_s(dev, mdl, drf, k,
+                                       context_tokens=ctx))
+    want = (k * float(cm.draft_s(dev, drf, 1.0, ctx))
+            + float(cm.verify_s(dev, mdl, k + 1, ctx)))
+    assert tick == pytest.approx(want)
+    # pricing the draft steps on a slow edge device raises the tick
+    edge_tick = float(cm.speculative_tick_s(dev, mdl, drf, k,
+                                            context_tokens=ctx,
+                                            draft_device=edge))
+    assert edge_tick > tick
+    assert edge_tick == pytest.approx(
+        k * float(cm.draft_s(edge, drf, 1.0, ctx))
+        + float(cm.verify_s(dev, mdl, k + 1, ctx)))
+
+
+def test_speculative_itl_acceptance_discount():
+    """Effective ITL = tick / expected_accepted: above-breakeven
+    acceptance beats plain decode, zero acceptance is strictly worse —
+    the signal the router's fourth-shape pricing keys on."""
+    dev = cm.DEVICES["rtx3090ti"]
+    mdl = cm.MODELS["qwen3vl-8b"]
+    drf = cm.MODELS["qwen3vl-2b"]
+    k, ctx = 2, 48
+    plain = float(cm.decode_s(dev, mdl, 1, context_tokens=ctx))
+    tick = float(cm.speculative_tick_s(dev, mdl, drf, k,
+                                       context_tokens=ctx))
+    itl = lambda a: float(cm.speculative_itl_s(dev, mdl, drf, k, a,
+                                               context_tokens=ctx))
+    assert itl(0.6) < plain < itl(0.0) == pytest.approx(tick)
+    assert itl(0.9) < itl(0.6)  # monotone in acceptance
+
+
+# ---------------------------------------------- router: fourth shape
+
+
+def _stub_router(latencies, spec, **kw):
+    servers = [ServerHandle(name=f"s{i}", model_id=0, device_id=0,
+                            is_cloud=False,
+                            execute=lambda t, v=v: (v, True))
+               for i, v in enumerate(latencies)]
+    return QLMIORouter(servers, milp_pred=lambda t, s: latencies[s],
+                       mgqp_pred=lambda t, s: 0.9,
+                       spec_pred=spec, **kw)
+
+
+def test_router_plan_prefers_spec_shape():
+    """plan() picks draft-on-A/verify-on-B when the speculative pair
+    beats every pure shape, and reports the draft server the cluster
+    submit needs (prefill_server stays None — it is not disaggregation)."""
+    r = _stub_router([10.0, 10.0], spec=lambda t, sa, sv: 2.0
+                     if sa != sv else None)
+    p = r.plan(0)
+    assert p["draft_server"] is not None
+    assert p["draft_server"] != p["server"]
+    assert p["prefill_server"] is None
+    assert p["predicted_s"] == pytest.approx(2.0)
+
+
+def test_router_plan_colocated_speculation():
+    """A == B prices colocated cloud speculation: draft_server equals the
+    verify server in the winning shape."""
+    r = _stub_router([10.0, 10.0], spec=lambda t, sa, sv: 3.0
+                     if sa == sv == 1 else None)
+    p = r.plan(0)
+    assert (p["server"], p["draft_server"]) == (1, 1)
+
+
+def test_router_plan_spec_fallback_to_pure():
+    """Without spec_pred — or when every pair declines (None) or prices
+    above plain decode — plan() degrades to the pure shape."""
+    r = _stub_router([1.0, 5.0], spec=None)
+    assert r.plan(0)["draft_server"] is None
+    r2 = _stub_router([1.0, 5.0], spec=lambda t, sa, sv: None)
+    assert r2.plan(0)["draft_server"] is None
+    r3 = _stub_router([1.0, 5.0], spec=lambda t, sa, sv: 50.0)
+    p3 = r3.plan(0)
+    assert (p3["server"], p3["draft_server"]) == (0, None)
+
+
+def test_router_plan_spec_skips_unhealthy():
+    """A dead draft or verify server appears in no speculative pair."""
+    r = _stub_router([1.0, 5.0], spec=lambda t, sa, sv: 0.1)
+    r.health.dead_until[0] = 100.0
+    p = r.plan(0)
+    assert p["server"] == 1
+    assert p["draft_server"] in (None, 1)  # never the dead server 0

@@ -108,6 +108,41 @@ def test_stream_events_arrive_during_decode(qwen):
     assert len(set(seen)) > 2  # grew incrementally across steps
 
 
+def test_stream_multi_token_spec_ticks(qwen):
+    """Regression: a speculative engine emits 1..spec_k+1 tokens per
+    tick, and every accepted token must still surface as its own
+    in-order ``StreamEvent`` (contiguous indices, single first/final) —
+    not one event per tick."""
+    cfg, model, params = qwen
+    prompt = _prompt(cfg, seed=3)
+
+    eng = _engine(model, params)
+    eng.submit(ContinuumRequest(tokens=prompt, max_new_tokens=10))
+    base = eng.run_until_drained()[0]
+
+    events = []
+    spec = _engine(model, params, draft_config=cfg, draft_seed=0,
+                   spec_k=3)
+    req = spec.submit(ContinuumRequest(tokens=prompt, max_new_tokens=10,
+                                       stream=events.append))
+    grew = []
+    for _ in range(10_000):
+        n0 = len(events)
+        spec.step()
+        grew.append(len(events) - n0)
+        assert [e.token for e in events] == list(req.output)
+        if req.done:
+            break
+    assert req.done
+    assert req.output == base.output  # speculation never alters tokens
+    evs = _check_stream_shape(events, req.uid, len(base.output))
+    assert [e.token for e in evs] == list(base.output)
+    # some tick really accepted >1 draft: a single step emitted >1 event
+    assert spec.stats()["spec_tokens_accepted"] > 0
+    assert max(grew) >= 2
+    assert spec.metrics.counter("stream_tokens").value == len(evs)
+
+
 # ----------------------------------------- admission batching knobs
 
 
