@@ -27,6 +27,7 @@ import numpy as np
 
 from benchmarks.common import emit
 
+from repro.distributed.tp import serving_mesh
 from repro.kernels import ops, ref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.serving.kv_cache import kv_token_bytes
@@ -392,6 +393,17 @@ def main(argv: "list[str]") -> dict:
         if not sections:
             out = run()  # full sweep: kernels + paged_kv + serving
     if json_path:
+        # provenance block so a checked-in results file says what ran it:
+        # numbers from an emulated host mesh vs a real accelerator are
+        # not comparable, and mesh shape pins the TP width benchmarked
+        dev = jax.devices()[0]
+        out["meta"] = {
+            "backend": jax.default_backend(),
+            "device_kind": dev.device_kind,
+            "device_count": jax.device_count(),
+            "mesh_shape": dict(serving_mesh(jax.device_count()).shape),
+            "sections": sections or ["full_sweep"],
+        }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1)
         print(f"kernel_bench: wrote {json_path}")

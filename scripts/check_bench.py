@@ -87,6 +87,10 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite baseline values from this measurement")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated dotted-path prefixes; gate only "
+                         "the baseline metrics under them (for partial "
+                         "bench runs, e.g. --only fig15,tp)")
     args = ap.parse_args(argv)
 
     bench: dict = {}
@@ -97,6 +101,15 @@ def main(argv=None) -> int:
         baseline = json.load(f)
 
     metrics = baseline["metrics"]
+    if args.only:
+        prefixes = [p.strip() for p in args.only.split(",") if p.strip()]
+        metrics = {name: spec for name, spec in metrics.items()
+                   if any(name == p or name.startswith(p + ".")
+                          for p in prefixes)}
+        if not metrics:
+            print(f"check_bench: no baseline metrics match --only "
+                  f"{args.only!r}", file=sys.stderr)
+            return 1
     if args.update:
         missing = []
         for name, spec in metrics.items():

@@ -14,6 +14,9 @@ fi
 
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# multi-device host mesh: the tensor-parallel serving tests and the
+# fig15 live-identity part shard real engines over this emulated mesh
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
 # lint (same commands as the CI lint job; skipped when ruff is absent)
 if command -v ruff >/dev/null 2>&1; then
@@ -73,15 +76,25 @@ PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig13_scaleout.py \
     --smoke --trace results/fig13_trace.json
 python scripts/trace_report.py results/fig13_trace.json
 
+# tensor-parallel smoke: live engines sharded over the 8-way host mesh
+# must emit bit-identical token streams at TP in {1,2,4,8}; the cost
+# model's TP rooflines (deterministic tp.* rows) must scale; and the
+# continuum replay with a TP=4 cloud must beat the flat fleet on mean
+# e2e at an equal-or-better completion rate (fig15.* rows)
+PYTHONPATH=".:${PYTHONPATH}" python benchmarks/fig15_tensor_parallel.py \
+    --smoke
+
 # benchmark regression gate: kernel/serving numbers + the fig10 replay's
 # cost_model.mean_abs_pct_err + the fig12 migration headline metrics +
 # the fig13 scale-out headline metrics (incl. the deterministic
 # fig13.oactive_steps_large O(active) gate) + the fig14 speculative
-# headline metrics (measured ITL reduction, live acceptance), all vs.
-# benchmarks/baseline.json
+# headline metrics (measured ITL reduction, live acceptance) + the fig15
+# tensor-parallel rows (deterministic tp.* rooflines, TP-cloud replay),
+# all vs. benchmarks/baseline.json
 python scripts/check_bench.py results/bench.json \
     results/fig10_continuum_replay.json results/fig12_disaggregation.json \
-    results/fig13_scaleout.json results/fig14_speculative.json
+    results/fig13_scaleout.json results/fig14_speculative.json \
+    results/fig15_tensor_parallel.json
 
 # multimodal split-point smoke: the QLMIO-chosen per-request split (raw-
 # ship vs edge-encode) must beat both fixed policies on mean e2e latency

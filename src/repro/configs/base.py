@@ -56,6 +56,17 @@ class ArchConfig:
     encoder_layers: int = 0
     encoder_seq: int = 0  # precomputed frame embeddings (frontend stub)
     cross_attention: bool = False
+    # --- tensor parallelism (set by distributed/tp.py local configs) ---
+    # Mesh axis the forward pass reduces partial results over.  Empty =
+    # single-device semantics (no collectives anywhere in the model).
+    tp_axis: str = ""
+    # Which components this *local* config holds a 1/tp shard of:
+    # subset of {"heads", "kv_heads", "mlp", "experts", "expert_ff",
+    # "shared_ff"}.  Drives where the model inserts all-gathers
+    # (output-column-parallel wo / down projections, expert parallelism)
+    # when running inside a shard_map body.  All collectives are pure
+    # data movement, so sharded results are bit-identical to unsharded.
+    tp_shards: Tuple[str, ...] = ()
     # --- numerics / tiling ---
     act_dtype: str = "bfloat16"  # activation dtype (norms/softmax in fp32)
     scan_chunk: int = 256  # SSD / mLSTM chunkwise block length

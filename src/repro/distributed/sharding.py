@@ -81,8 +81,7 @@ class ShardingPlan:
         from repro.train.optimizer import AdamWState
         f32 = tree_map_specs(one, spec_tree)
         scalar = NamedSharding(self.mesh, P())
-        return AdamWState(scalar, f32, tree_map_specs(one, spec_tree),
-                          tree_map_specs(one, spec_tree))
+        return AdamWState(scalar, f32, f32, f32)
 
     # ------------------------------------------------------------ batches
     def batch(self, batch_tree: Tree) -> Tree:
@@ -106,6 +105,20 @@ class ShardingPlan:
 
         def shard_cache_leaf(name, leaf):
             shp = leaf.shape
+            if name in ("k_pages", "v_pages", "k_scales", "v_scales"):
+                # paged pool: [L, P, bs, Hkv(, Dh)].  The page axis (1)
+                # must stay unsharded — host-side CoW copies, scatters and
+                # snapshot export/import all index it — so shard the kv
+                # heads over "model" when divisible, else fall back to the
+                # in-page sequence axis (bs), the paged analogue of the
+                # dense KV-sequence fallback.
+                Hkv, bs = shp[3], shp[2]
+                ps = [None] * leaf.ndim
+                if Hkv % model_sz == 0:
+                    ps[3] = "model"
+                elif bs % model_sz == 0:
+                    ps[2] = "model"
+                return NamedSharding(mesh, P(*ps))
             if name in ("k", "v", "xk", "xv"):
                 # [L?, B, S, Hkv, Dh]
                 Ld = leaf.ndim - 4
@@ -168,9 +181,16 @@ def make_plan(cfg: ArchConfig, mesh: Mesh, *, rules_override: dict | None = None
         None: None,
     }
     if cfg.n_experts and rules["experts"] is None:
-        # 60 experts on a 16-wide model axis: fall back to sharding the
-        # per-expert ff dim (kept small) -> keep mlp rule
-        pass
+        # 60 experts on a 16-wide model axis: experts cannot split across
+        # devices, so fall back to sharding each expert's ff dim through
+        # the "mlp" rule (w_gate/w_up/w_down all carry it).  When even the
+        # per-expert ff dim does not divide, drop the mlp rule too —
+        # otherwise dense/shared mlp leaves would shard while the expert
+        # ff stayed replicated, a mixed layout the serving collective
+        # contract (one sharding mode per MoE block) cannot express.
+        if cfg.moe_ff % model_sz != 0 or (
+                cfg.shared_ff and cfg.shared_ff % model_sz != 0):
+            rules["mlp"] = None
     if rules_override:
         rules.update(rules_override)
         batch_axes = rules["batch"]  # may be overridden (e.g. pure-DP plan)
@@ -184,5 +204,6 @@ def abstract_opt_state(abstract_params_tree: Tree):
         abstract_params_tree)
     step = jax.ShapeDtypeStruct((), np.int32)
     from repro.train.optimizer import AdamWState
-    return AdamWState(step, f32, jax.tree.map(lambda x: x, f32),
-                      jax.tree.map(lambda x: x, f32))
+    # ShapeDtypeStructs are immutable; the three moment trees can share
+    # the same struct objects instead of two no-op tree_map copies
+    return AdamWState(step, f32, f32, f32)

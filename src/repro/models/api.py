@@ -396,7 +396,7 @@ class Model:
         q = apply_rope(q, cos, sin, pos[:, None])
         k = apply_rope(k, cos, sin, pos[:, None])
         o, kv = attend(q[:, 0], k[:, 0], v[:, 0], kv, window)
-        o = o.reshape(B, -1) @ pl["attn"]["wo"].astype(x.dtype)
+        o = lm._attn_out(pl["attn"], cfg, o.reshape(B, -1), x.dtype)
         if cfg.post_norms:
             o = lm._norm(pl, o, cfg.norm, "pn1")
         y = x + o
@@ -405,7 +405,9 @@ class Model:
             f = lm.moe_lib.moe_apply(pl["moe"], yn[:, 0], top_k=cfg.top_k,
                                      norm_topk=cfg.norm_topk,
                                      capacity_factor=cfg.capacity_factor,
-                                     act=lm._act(cfg.act))
+                                     act=lm._act(cfg.act),
+                                     tp_axis=cfg.tp_axis,
+                                     tp_shards=cfg.tp_shards)
         else:
             f = lm._mlp(pl["mlp"], cfg, yn)[:, 0]
         if cfg.post_norms:
@@ -428,7 +430,7 @@ class Model:
         q = apply_rope(q, cos, sin, qpos)
         k = apply_rope(k, cos, sin, qpos)
         o, kv = attend(q, k, v, kv, window)
-        o = o.reshape(B, C, -1) @ pl["attn"]["wo"].astype(x.dtype)
+        o = lm._attn_out(pl["attn"], cfg, o.reshape(B, C, -1), x.dtype)
         if cfg.post_norms:
             o = lm._norm(pl, o, cfg.norm, "pn1")
         return lm._ffn(pl, cfg, x + o), kv

@@ -118,6 +118,34 @@ def _act(name):
     raise ValueError(name)
 
 
+def _col_gathered(x, w, cfg: ArchConfig, dt):
+    """``x @ w`` where ``x``'s last dim and ``w``'s *output* columns are
+    both TP-sharded (``w`` holds the full contraction dim but 1/tp of the
+    output columns).
+
+    Two all-gathers — pure data movement, no arithmetic — rebuild the
+    replicated input and output around one exact local matmul: every
+    output element is the full-contraction dot product computed on
+    exactly one shard, so the result is **bitwise identical** to the
+    unsharded matmul (XLA's dot gives bitwise column-sliceable results).
+    Megatron-style row-parallel + psum would be cheaper on the wire but
+    rounds split-K partial sums differently, breaking the engine's
+    token-identical-under-sharding contract.
+    """
+    full = jax.lax.all_gather(x, cfg.tp_axis, axis=x.ndim - 1, tiled=True)
+    y = full @ w.astype(dt)
+    return jax.lax.all_gather(y, cfg.tp_axis, axis=y.ndim - 1, tiled=True)
+
+
+def _attn_out(pl_attn, cfg: ArchConfig, o, dt):
+    """Attention output projection ``o @ wo``.  TP-sharded heads hand in
+    the local heads' outputs; wo holds all H*Dh rows but a 1/tp slice of
+    the d_model output columns (see ``_col_gathered``)."""
+    if cfg.tp_axis and "heads" in cfg.tp_shards:
+        return _col_gathered(o, pl_attn["wo"], cfg, dt)
+    return o @ pl_attn["wo"].astype(dt)
+
+
 # ------------------------------------------------------------- spec builders
 
 
@@ -275,10 +303,15 @@ def _qkv(pl, cfg, xn, B, S):
 def _mlp(pl, cfg, xn):
     dt = xn.dtype
     act = _act(cfg.act)
+    tp = bool(cfg.tp_axis) and "mlp" in cfg.tp_shards
     if "w1" in pl:  # plain
         h = act(xn @ pl["w1"].astype(dt) + pl["b1"].astype(dt))
+        if tp:  # b2 is replicated, added once to the gathered output
+            return _col_gathered(h, pl["w2"], cfg, dt) + pl["b2"].astype(dt)
         return h @ pl["w2"].astype(dt) + pl["b2"].astype(dt)
     h = act(xn @ pl["w_gate"].astype(dt)) * (xn @ pl["w_up"].astype(dt))
+    if tp:
+        return _col_gathered(h, pl["w_down"], cfg, dt)
     return h @ pl["w_down"].astype(dt)
 
 
@@ -294,7 +327,9 @@ def _ffn(pl, cfg, x):
                                      norm_topk=cfg.norm_topk,
                                      capacity_factor=cfg.capacity_factor,
                                      act=_act(cfg.act),
-                                     dispatch_axes=cfg.moe_dispatch_axes)
+                                     dispatch_axes=cfg.moe_dispatch_axes,
+                                     tp_axis=cfg.tp_axis,
+                                     tp_shards=cfg.tp_shards)
 
         nc = cfg.moe_scan_chunks
         if nc and (B * S) % nc == 0 and (B * S) // nc >= 4 * cfg.n_experts:
@@ -334,7 +369,7 @@ def _attn_layer_train(cfg, pl, x, rope, window, positions, pkv=None):
         ka = jnp.concatenate([pkv[0].astype(k.dtype), k], 1)
         va = jnp.concatenate([pkv[1].astype(v.dtype), v], 1)
     o = flash_attention(q, ka, va, causal=True, window=window)
-    o = o.reshape(B, S, -1) @ pl["attn"]["wo"].astype(x.dtype)
+    o = _attn_out(pl["attn"], cfg, o.reshape(B, S, -1), x.dtype)
     if cfg.post_norms:
         o = _norm(pl, o, cfg.norm, "pn1")
     x = x + o

@@ -58,7 +58,7 @@ def capacity(n_tokens: int, n_experts: int, top_k: int,
 
 def moe_apply(p, x, *, top_k: int, norm_topk: bool,
               capacity_factor: float = 1.25, act=jax.nn.silu,
-              dispatch_axes=None):
+              dispatch_axes=None, tp_axis: str = "", tp_shards=()):
     """x [T, d] -> [T, d].  p holds one layer's weights (no leading L dim).
 
     ``dispatch_axes``: mesh axes to pin the capacity dim of the [E, C, d]
@@ -66,6 +66,21 @@ def moe_apply(p, x, *, top_k: int, norm_topk: bool,
     the constraint GSPMD tends to all-reduce the whole dispatch buffer per
     layer; with it the cross-shard token movement lowers to all-to-all /
     all-gather of token rows (see EXPERIMENTS.md §Perf cell D).
+
+    ``tp_axis``/``tp_shards`` (distributed/tp.py, inside shard_map): the
+    router is always replicated (its E axis is unsharded) and the full-E
+    dispatch runs on every shard, so gating/top-k/sort are bit-identical
+    everywhere.  With ``"experts"`` in ``tp_shards`` each shard holds
+    ``E_loc = E / tp`` experts' weights: it slices its experts' rows out
+    of the dispatch buffer, runs the local grouped matmuls, and an
+    all-gather rebuilds the full [E, C, d] expert outputs — the combine
+    is then identical to single-device (expert parallelism, bit-exact).
+    With ``"expert_ff"`` each shard holds a 1/tp slice of every expert's
+    ff dim plus a 1/tp output-column slice of the down projection: an
+    all-gather rebuilds the full ff activations, the local grouped
+    down-projection computes exact output columns, and a second gather
+    replicates them (the non-divisible-E fallback, sharding.make_plan) —
+    bit-identical, like every collective here (no split-K partial sums).
     """
     T, d = x.shape
     E = p["router"].shape[-1]
@@ -104,9 +119,32 @@ def moe_apply(p, x, *, top_k: int, norm_topk: bool,
     xe = pin(xe, (None, cap_ax, None))
 
     # ---- grouped expert compute (the Pallas-kernel contraction on TPU)
-    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
-    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
-    ye = jnp.einsum("ecf,efd->ecd", act(g) * u, p["w_down"].astype(x.dtype))
+    expert_par = bool(tp_axis) and "experts" in tp_shards
+    ff_par = bool(tp_axis) and "expert_ff" in tp_shards
+    if expert_par:
+        E_loc = p["w_gate"].shape[0]
+        rank = jax.lax.axis_index(tp_axis)
+        xe_loc = jax.lax.dynamic_slice_in_dim(xe, rank * E_loc, E_loc, 0)
+        g = jnp.einsum("ecd,edf->ecf", xe_loc, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe_loc, p["w_up"].astype(x.dtype))
+        ye_loc = jnp.einsum("ecf,efd->ecd", act(g) * u,
+                            p["w_down"].astype(x.dtype))
+        # axis-index order rebuilds experts [0, E) in order
+        ye = jax.lax.all_gather(ye_loc, tp_axis, axis=0, tiled=True)
+    else:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+        if ff_par:
+            # gather the local ff activations to full width, then the
+            # down projection (full contraction, 1/tp output columns) is
+            # exact — see lm._col_gathered for why this beats a psum
+            gu = jax.lax.all_gather(act(g) * u, tp_axis, axis=2, tiled=True)
+            ye = jax.lax.all_gather(
+                jnp.einsum("ecf,efd->ecd", gu, p["w_down"].astype(x.dtype)),
+                tp_axis, axis=2, tiled=True)
+        else:
+            ye = jnp.einsum("ecf,efd->ecd", act(g) * u,
+                            p["w_down"].astype(x.dtype))
     ye = pin(ye, (None, cap_ax, None))
 
     # ---- combine: each (token, k) slot gathers its expert output
@@ -122,7 +160,13 @@ def moe_apply(p, x, *, top_k: int, norm_topk: bool,
     if "shared_gate" in p:
         sgx = act(x @ p["shared_gate"].astype(x.dtype)) * (
             x @ p["shared_up"].astype(x.dtype))
-        shared = sgx @ p["shared_down"].astype(x.dtype)
+        if bool(tp_axis) and "shared_ff" in tp_shards:
+            sgx_full = jax.lax.all_gather(sgx, tp_axis, axis=1, tiled=True)
+            shared = jax.lax.all_gather(
+                sgx_full @ p["shared_down"].astype(x.dtype),
+                tp_axis, axis=1, tiled=True)
+        else:
+            shared = sgx @ p["shared_down"].astype(x.dtype)
         sg_gate = jax.nn.sigmoid(
             x.astype(jnp.float32) @ p["shared_router"].astype(jnp.float32))
         y = y + shared.astype(jnp.float32) * sg_gate

@@ -380,7 +380,7 @@ class EngineHandle(ServerHandle):
                  kv_dtype: str | None = None, fail: bool = False,
                  draft_profile: "cm.ModelProfile | None" = None,
                  draft_device: "cm.DeviceProfile | None" = None,
-                 spec_k: int = 3,
+                 spec_k: int = 3, tp: int = 1,
                  telemetry=None, backend: str = "live", **engine_kw):
         """``draft_profile`` turns on speculative decoding for this
         handle: the live engine drafts with a small same-arch model and
@@ -390,10 +390,18 @@ class EngineHandle(ServerHandle):
         (None = colocated on this handle's device; an edge device here
         is the edge-drafts/cloud-verifies offloading shape, where only
         token ids ride the uplink) plus one multi-token verify pass of
-        this handle's own profile.  Live backend only."""
+        this handle's own profile.  Live backend only.
+
+        ``tp`` is the handle's tensor-parallel mesh width — a continuum
+        routing axis: the live engine shards over a ``tp``-wide host mesh
+        (distributed/tp.py; bit-identical tokens), and the tick costs
+        switch to the cost model's TP rooflines (bytes and FLOPs divided
+        by ``tp`` plus the per-layer collective term on ``ici_bw``), so
+        the router prices mesh width exactly like every other knob."""
         cfg = reduced(get_config(arch))
         self.cfg = cfg
         self.backend = backend
+        self.tp = tp
         self.vtime = 0.0
         self.time_scale = time_scale
         self.draft_profile = draft_profile
@@ -439,6 +447,9 @@ class EngineHandle(ServerHandle):
                 # is whatever the two numerical paths agree on, and the
                 # emitted stream is bit-identical regardless
                 engine_kw.setdefault("draft_params", params)
+            if tp > 1:
+                from repro.distributed.tp import serving_mesh
+                engine_kw.setdefault("mesh", serving_mesh(tp))
             self.engine = ServingEngine(model, params, max_batch=max_batch,
                                         max_seq=max_seq, kv_dtype=kv_dtype,
                                         clock=lambda: self.vtime,
@@ -462,6 +473,15 @@ class EngineHandle(ServerHandle):
                                             * profile.bytes_per_param
                                             + kv_stream) / bw)
         self.prefill_tok_s = time_scale * 2.0 * profile.n_active / eff
+        if tp > 1:
+            # TP rooflines replace the single-device ticks (the tp=1
+            # expressions above stay verbatim so every calibrated replay
+            # is bitwise untouched when the knob is off)
+            self.decode_tick_s = time_scale * float(cm.decode_s(
+                device, profile, 1.0, context_tokens=max_seq / 2,
+                kv_dtype=kv_dtype, tp=tp))
+            self.prefill_tok_s = time_scale * float(cm.prefill_s(
+                device, profile, 1.0, tp=tp))
         # speculative handles charge the spec tick (k drafts priced as
         # draft_profile on draft_device + one multi-token verify here)
         # instead of the plain decode tick; each tick then emits 1..k+1
@@ -471,7 +491,7 @@ class EngineHandle(ServerHandle):
             self.spec_tick_s = float(time_scale * cm.speculative_tick_s(
                 device, profile, draft_profile, spec_k,
                 context_tokens=max_seq / 2, kv_dtype=kv_dtype,
-                draft_device=self.draft_device))
+                draft_device=self.draft_device, tp=tp))
             self._tick_s = self.spec_tick_s
         else:
             self.spec_tick_s = None
@@ -1300,6 +1320,7 @@ class EngineBackend:
 def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
                     fail=(), telemetry=None, arch: str | None = None,
                     param_seed: int | None = None, backend: str = "live",
+                    tp: "int | dict | None" = None,
                     **engine_kw) -> "list[EngineHandle]":
     """Live handles for a ``[(class_idx, count), ...]`` spec (the
     ``SYSTEM_CONFIGS`` layout) — pair with
@@ -1319,7 +1340,16 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
     ``backend="sim"`` swaps every handle's live engine for the analytic
     ``SimEngine`` — no weights, no XLA, same profiled tick costs — which
     is what makes 100+ handle fleets (benchmarks/fig13_scaleout.py)
-    constructible in milliseconds."""
+    constructible in milliseconds.
+
+    ``tp`` makes mesh width a tier knob: an int shards only the cloud
+    class (the tier with interconnect worth spending), a
+    ``{class_idx: tp}`` dict shards per class.  Live handles get a real
+    ``tp``-wide host mesh; both backends price the width through the
+    cost model's TP tick terms, which is how the router sees it."""
+    if isinstance(tp, int):
+        tp = {len(SERVER_CLASSES) - 1: tp}
+    tp = tp or {}
     handles = []
     i = 0
     for class_idx, count in spec:
@@ -1333,6 +1363,6 @@ def build_continuum(spec, *, seed: int = 0, time_scale: float = 1.0,
                 arch_i, cm.DEVICES[dev_name], cm.MODELS[prof_name],
                 is_cloud=cloud, seed=seed_i, fail=i in fail,
                 time_scale=time_scale, telemetry=telemetry,
-                backend=backend, **engine_kw))
+                backend=backend, tp=int(tp.get(class_idx, 1)), **engine_kw))
             i += 1
     return handles

@@ -203,7 +203,8 @@ class ServingEngine:
                  max_live_batches: "int | None" = None,
                  batching_wait_secs: float = 0.0,
                  clock: "Callable[[], float] | None" = None,
-                 telemetry=None, trace_name: str = "engine"):
+                 telemetry=None, trace_name: str = "engine",
+                 mesh=None):
         """``prefill_chunk`` — tokens appended to the cache per chunked
         prefill call (0 disables chunking: one monolithic, still bucketed,
         prefill per admission).  ``prefill_budget`` — prefill tokens spent
@@ -267,6 +268,16 @@ class ServingEngine:
         clock instead, so ``latency_stats()`` reports TTFT/ITL/e2e in
         virtual-clock seconds rather than host wall time.
 
+        ``mesh`` — a ``jax.sharding.Mesh`` with a ``model`` axis
+        (``repro.distributed.tp.serving_mesh``) turns on tensor-parallel
+        serving: weights and the paged KV pool are sharded across the
+        mesh (``distributed/tp.ShardedServing``) and every hot jitted
+        step runs under ``shard_map``.  Paged backend only.  Host-side
+        page bookkeeping (CoW, scatters, snapshot export/import) indexes
+        the unsharded page axis, so prefix caching, migration and
+        speculative decoding all work unchanged; the draft model stays
+        unsharded (draft/verify traffic crosses the host anyway).
+
         ``telemetry`` — optional ``repro.serving.telemetry.Telemetry``.
         When given (and its tracer enabled), the engine records request
         lifecycle spans and per-tick occupancy counter samples against its
@@ -297,6 +308,19 @@ class ServingEngine:
                 "kv_dtype='int8' needs the paged cache backend (dense/"
                 "recurrent caches stay bf16)")
         self.kv_dtype = kv_dtype
+        # ---- tensor-parallel serving (mesh= -> shard_map'd jit surface)
+        self.mesh = mesh
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError(
+                    "mesh= (tensor-parallel serving) needs the paged cache "
+                    "backend; use paged=True")
+            from repro.distributed.tp import ShardedServing
+            self._tp = ShardedServing(model, mesh)
+            self.params = self._tp.shard_params(params)
+        else:
+            self._tp = None
+        serving = self._tp if self._tp is not None else model
         self.return_logits = return_logits
         self.bucketing = bucket_prompts and model.supports_bucketed_prefill
         self.chunked = prefill_chunk > 0 and model.supports_chunked_prefill
@@ -325,7 +349,7 @@ class ServingEngine:
         self._cur_group: "int | None" = None
         self._admission_held = False  # tick ended with queue held back
         self._traced: set = set()  # distinct prefill-path trace shapes
-        self._prefill = jax.jit(model.prefill)
+        self._prefill = jax.jit(serving.prefill)
         # ---- metrics registry: counters the hot paths increment directly
         # (bound attributes, no dict lookups), everything else views/hists.
         # latency_stats()/stats() are thin views over this registry.
@@ -403,11 +427,15 @@ class ServingEngine:
                                                   kv_dtype=kv_dtype)
             self.cache = {name: jnp.zeros(s.shape, s.dtype)
                           for name, s in abstract.items()}
+            if self._tp is not None:
+                shardings = self._tp.cache_shardings(abstract)
+                self.cache = {name: jax.device_put(leaf, shardings[name])
+                              for name, leaf in self.cache.items()}
             self.tables = np.full((max_batch, self.max_blocks), -1, np.int32)
             self.block_tables: list[BlockTable | None] = [None] * max_batch
-            self._step = self._make_step(model.serve_step_paged)
-            self._prefill_sfx = jax.jit(model.prefill_with_prefix)
-            self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
+            self._step = self._make_step(serving.serve_step_paged)
+            self._prefill_sfx = jax.jit(serving.prefill_with_prefix)
+            self._prefill_chunk = jax.jit(serving.prefill_chunk_paged,
                                           donate_argnums=(1,))
         else:
             self.cache = self._empty_cache()
@@ -455,7 +483,7 @@ class ServingEngine:
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
             def _vstep(params, cache, batch,
-                       _base=model.verify_step_paged):
+                       _base=serving.verify_step_paged):
                 logits, cache = _base(params, cache, batch)
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache
 

@@ -34,6 +34,10 @@ class DeviceProfile:
     net_bw: float  # B/s to the user (LAN for edge, WAN for cloud)
     rtt: float  # s
     hbm_bytes: float = 16e9  # accelerator memory (caps resident KV)
+    # device-to-device interconnect B/s *within* a tensor-parallel group
+    # (NVLink / ICI / PCIe) — what the per-layer all-gathers of sharded
+    # serving ride on; irrelevant at tp=1
+    ici_bw: float = 1e11
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,31 +49,37 @@ class ModelProfile:
     # KV-cache geometry (n_layers, kv_heads, head_dim): rough dims of the
     # profiled checkpoints, enough for per-token KV byte rooflines
     kv_layout: "tuple[int, int, int]" = (28, 4, 128)
+    # residual width — sizes the per-layer activation all-gathers of
+    # tensor-parallel serving (tp_collective_s)
+    d_model: float = 2048.0
 
 
 DEVICES = {
     "jetson_orin_nano": DeviceProfile("jetson_orin_nano", 20e12, 48e9,
-                                      12.5e6, 0.004, hbm_bytes=8e9),
+                                      12.5e6, 0.004, hbm_bytes=8e9,
+                                      ici_bw=8e9),  # no NVLink: PCIe-class
     "rtx3090ti": DeviceProfile("rtx3090ti", 120e12, 800e9, 12.5e6, 0.004,
-                               hbm_bytes=24e9),
+                               hbm_bytes=24e9, ici_bw=16e9),
     "rtx5090": DeviceProfile("rtx5090", 300e12, 1.5e12, 3e6, 0.030,
-                             hbm_bytes=32e9),
+                             hbm_bytes=32e9, ici_bw=32e9),
     # TPU-native serving classes (hardware adaptation; README.md, Design notes)
     "tpu_v5e_1": DeviceProfile("tpu_v5e_1", 197e12, 819e9, 12.5e6, 0.004,
-                               hbm_bytes=16e9),
+                               hbm_bytes=16e9, ici_bw=180e9),
     "tpu_v5e_4": DeviceProfile("tpu_v5e_4", 4 * 197e12, 4 * 819e9,
-                               12.5e6, 0.004, hbm_bytes=4 * 16e9),
+                               12.5e6, 0.004, hbm_bytes=4 * 16e9,
+                               ici_bw=180e9),
     "tpu_v5e_pod": DeviceProfile("tpu_v5e_pod", 256 * 197e12, 256 * 819e9,
-                                 3e6, 0.030, hbm_bytes=256 * 16e9),
+                                 3e6, 0.030, hbm_bytes=256 * 16e9,
+                                 ici_bw=180e9),
 }
 
 MODELS = {
     "qwen3vl-2b": ModelProfile("qwen3vl-2b", 2e9, 1.0, 0.94,
-                               kv_layout=(28, 2, 128)),
+                               kv_layout=(28, 2, 128), d_model=2048.0),
     "qwen3vl-8b": ModelProfile("qwen3vl-8b", 8e9, 1.0, 0.88,
-                               kv_layout=(36, 4, 128)),
+                               kv_layout=(36, 4, 128), d_model=4096.0),
     "qwen3vl-30b": ModelProfile("qwen3vl-30b", 3e9, 2.0, 1.02,  # MoE A3B
-                                kv_layout=(48, 4, 128)),
+                                kv_layout=(48, 4, 128), d_model=2048.0),
 }
 
 MODEL_IDS = list(MODELS)
@@ -183,17 +193,48 @@ def migrate_s(model: ModelProfile, n_tokens, src: DeviceProfile,
                           src, dst)
 
 
+# ------------------------------------------------- tensor-parallel terms
+#
+# A tp-wide mesh (distributed/tp.py) divides the weight + KV bytes each
+# token streams and the prefill FLOPs across the ``model`` axis, but pays
+# ring all-gathers of the residual activations every layer.  The tp terms
+# are guarded with an exact early return at tp<=1 so every calibrated
+# single-device aggregate (Fig. 1/10/12/13/14) stays bitwise unchanged.
+
+_TP_GATHERS_PER_LAYER = 2.0  # attention-out + mlp-down gather pairs
+
+
+def tp_collective_s(device: DeviceProfile, model: ModelProfile, tokens,
+                    tp: int) -> np.ndarray:
+    """Seconds the per-layer activation all-gathers cost for ``tokens``
+    token-positions at mesh width ``tp``: each gather pair moves
+    ``2 * (tp-1)/tp`` of a bf16 ``d_model`` row per token over the
+    device's ``ici_bw`` ring.  0 at ``tp <= 1`` (no collectives)."""
+    if tp <= 1:
+        return np.asarray(tokens, float) * 0.0
+    L = model.kv_layout[0]
+    bytes_per_tok = (_TP_GATHERS_PER_LAYER * L
+                     * 2.0 * (tp - 1) / tp * model.d_model * 2.0)
+    return np.asarray(tokens, float) * bytes_per_tok / device.ici_bw
+
+
 def decode_s(device: DeviceProfile, model: ModelProfile, out_tokens,
-             context_tokens=0.0, kv_dtype: str = "bf16") -> np.ndarray:
+             context_tokens=0.0, kv_dtype: str = "bf16",
+             tp: int = 1) -> np.ndarray:
     """Decode roofline: every generated token streams the active weights
     plus the resident KV context (``context_tokens`` positions) through
     HBM.  ``context_tokens=0`` recovers the legacy weights-only decode
-    term used by ``latency_s``'s calibrated aggregates."""
+    term used by ``latency_s``'s calibrated aggregates.  ``tp > 1``
+    divides the streamed bytes across the mesh and adds the per-layer
+    collective term."""
     bytes_per_tok = (model.n_active * model.bytes_per_param
                      + kv_bytes_per_token(model, kv_dtype)
                      * np.asarray(context_tokens, float))
-    return np.asarray(out_tokens, float) * bytes_per_tok / (
+    base = np.asarray(out_tokens, float) * bytes_per_tok / (
         device.mem_bw * _EFF)
+    if tp <= 1:
+        return base
+    return base / tp + tp_collective_s(device, model, out_tokens, tp)
 
 
 def kv_concurrency(device: DeviceProfile, model: ModelProfile,
@@ -232,18 +273,23 @@ def draft_s(device: DeviceProfile, draft_model: ModelProfile,
 
 
 def verify_s(device: DeviceProfile, model: ModelProfile, k,
-             context_tokens=0.0, kv_dtype: str = "bf16") -> np.ndarray:
+             context_tokens=0.0, kv_dtype: str = "bf16",
+             tp: int = 1) -> np.ndarray:
     """One multi-token verify pass scoring ``k`` positions: the active
     weights and the resident KV context stream through HBM **once**
     (the paged-verify kernel reads each page a single time for all query
-    rows), plus ``2 * n_active * k`` FLOPs of batched scoring."""
+    rows), plus ``2 * n_active * k`` FLOPs of batched scoring.  ``tp > 1``
+    divides both across the mesh, plus one collective term for the pass
+    (all k rows share each layer's gathers)."""
     weights = model.n_active * model.bytes_per_param
     kv = kv_bytes_per_token(model, kv_dtype) * np.asarray(
         context_tokens, float)
     mem = (weights + kv) / (device.mem_bw * _EFF)
     flop = 2.0 * model.n_active * np.asarray(k, float) / (
         device.flops * _EFF)
-    return mem + flop
+    if tp <= 1:
+        return mem + flop
+    return (mem + flop) / tp + tp_collective_s(device, model, k, tp)
 
 
 def expected_accepted(k, acceptance) -> np.ndarray:
@@ -257,16 +303,19 @@ def expected_accepted(k, acceptance) -> np.ndarray:
 def speculative_tick_s(device: DeviceProfile, model: ModelProfile,
                        draft_model: ModelProfile, k, context_tokens=0.0,
                        kv_dtype: str = "bf16",
-                       draft_device: DeviceProfile | None = None):
+                       draft_device: DeviceProfile | None = None,
+                       tp: int = 1):
     """Seconds one speculative tick costs: ``k`` draft decode steps (on
     ``draft_device`` — None = colocated with the target; the edge-drafts/
     cloud-verifies shape prices drafting on the edge device) plus one
-    ``k+1``-position verify pass of the target."""
+    ``k+1``-position verify pass of the target.  ``tp`` shards only the
+    target's verify — the draft model stays unsharded (distributed/tp.py
+    leaves it replicated)."""
     dd = draft_device if draft_device is not None else device
     return (np.asarray(k, float)
             * draft_s(dd, draft_model, 1.0, context_tokens)
             + verify_s(device, model, np.asarray(k, float) + 1.0,
-                       context_tokens, kv_dtype))
+                       context_tokens, kv_dtype, tp=tp))
 
 
 def speculative_itl_s(device: DeviceProfile, model: ModelProfile,
@@ -315,17 +364,21 @@ def chunked_prefill_tokens(prompt_tokens, prefill_chunk: int,
 
 
 def prefill_s(device: DeviceProfile, model: ModelProfile, prompt_tokens,
-              prefill_chunk: int | None = None):
+              prefill_chunk: int | None = None, tp: int = 1):
     """Prefill-only roofline term (the part a prefix-cache hit elides).
 
     ``prefill_chunk`` (None = legacy smooth model) switches to the serving
     engine's bucketed/chunked token count, whose padding makes prefill a
-    step function of prompt length rather than a straight line.
+    step function of prompt length rather than a straight line.  ``tp > 1``
+    divides the FLOPs across the mesh plus the per-position collectives.
     """
     tokens = (np.asarray(prompt_tokens)
               if prefill_chunk is None
               else chunked_prefill_tokens(prompt_tokens, prefill_chunk))
-    return 2.0 * model.n_active * tokens / (device.flops * _EFF)
+    base = 2.0 * model.n_active * tokens / (device.flops * _EFF)
+    if tp <= 1:
+        return base
+    return base / tp + tp_collective_s(device, model, tokens, tp)
 
 
 def latency_terms(device: DeviceProfile, model: ModelProfile, prompt_tokens,

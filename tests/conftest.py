@@ -1,7 +1,9 @@
 import os
 import sys
 
-# keep tests on 1 device (the dry-run subprocess sets its own XLA_FLAGS)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# host-platform mesh for the tensor-parallel serving tests (the dry-run
+# subprocess sets its own XLA_FLAGS; CI's multi-device job inherits this)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
